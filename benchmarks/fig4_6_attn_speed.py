@@ -1,0 +1,78 @@
+"""Fig. 4/5/6 analogue: attention speed, 3 implementations x sequence length.
+
+Paper setting (A100): seq 512..16k with batch*seq = 16k tokens, hidden 2048,
+head dim 64/128, causal and non-causal, fwd and fwd+bwd. CPU adaptation:
+same batch*seq = const protocol with a reduced token budget; the *claims*
+validated are relative (flash >= ref as seq grows; causal ~halves time in
+packed mode), not A100 TFLOPs/s.
+
+Derived column: TFLOPs/s using the paper's formula
+    4 * seqlen^2 * head_dim * heads   ( / 2 if causal; * 2.5 for fwd+bwd ).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import AttentionConfig, attention
+from repro.core.masks import MaskSpec
+
+TOKENS = 4096  # batch * seq held constant, like the paper's 16k
+HEADS, HEAD_DIM = 4, 64
+SEQS = (256, 512, 1024, 2048)
+
+
+def _time(fn: Callable, *args, iters: int = 3) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def _flops(seq: int, batch: int, causal: bool, bwd: bool) -> float:
+    f = 4.0 * seq * seq * HEAD_DIM * HEADS * batch
+    if causal:
+        f /= 2
+    if bwd:
+        f *= 3.5  # fwd (1) + bwd (2.5)
+    return f
+
+
+def run(csv: List[str]) -> None:
+    key = jax.random.PRNGKey(0)
+    for causal in (False, True):
+        spec = MaskSpec(causal=causal)
+        for seq in SEQS:
+            batch = max(1, TOKENS // seq)
+            kq, kk, kv = jax.random.split(jax.random.fold_in(key, seq), 3)
+            q = jax.random.normal(kq, (batch, seq, HEADS, HEAD_DIM), jnp.float32)
+            k = jax.random.normal(kk, (batch, seq, HEADS, HEAD_DIM), jnp.float32)
+            v = jax.random.normal(kv, (batch, seq, HEADS, HEAD_DIM), jnp.float32)
+            for impl in ("ref", "flash_xla", "flash_pallas"):
+                if impl == "flash_pallas" and seq > 512:
+                    continue  # interpret-mode python loop: keep it tractable
+                cfg = AttentionConfig(
+                    impl=impl, block_q=128, block_kv=128,
+                    mode="packed" if causal else "dense",
+                )
+
+                fwd = jax.jit(lambda q, k, v, cfg=cfg: attention(q, k, v, spec, cfg))
+                t_f = _time(fwd, q, k, v)
+                csv.append(
+                    f"fig5_fwd/{impl}/causal={int(causal)}/seq={seq},"
+                    f"{t_f*1e6:.0f},{_flops(seq, batch, causal, False)/t_f/1e12:.4f} TFLOP/s"
+                )
+
+                loss = jax.jit(
+                    jax.grad(lambda q, k, v, cfg=cfg: attention(q, k, v, spec, cfg).sum())
+                )
+                t_b = _time(loss, q, k, v)
+                csv.append(
+                    f"fig4_fwdbwd/{impl}/causal={int(causal)}/seq={seq},"
+                    f"{t_b*1e6:.0f},{_flops(seq, batch, causal, True)/t_b/1e12:.4f} TFLOP/s"
+                )

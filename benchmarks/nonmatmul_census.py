@@ -1,0 +1,96 @@
+"""C1 validation: FA1-style vs FA2 non-matmul FLOP census + wall time.
+
+The paper's Section 3.1 claim: deferring the `diag(l)^-1` rescale to the end
+of the KV loop (C1a) and saving only the logsumexp (C1b) removes O(N*d) and
+O(N) non-matmul work *per KV block*. We lower both variants and
+
+  * count transcendental + divide elementwise FLOPs with the trip-aware HLO
+    walker (XLA's own cost_analysis counts scan bodies once),
+  * time both on CPU (same matmul FLOPs -> any delta is non-matmul work).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flash import flash_attention_with_lse
+from repro.core.flash_v1 import flash_v1_attention
+from repro.core.masks import MaskSpec
+from repro.utils.hlo_walker import HloModule
+
+B, S, H, D = 4, 2048, 4, 64
+BLOCK = 256
+
+
+def _census(fn, *args) -> dict:
+    hlo = jax.jit(fn).lower(*args).compile().as_text()
+    mod = HloModule(hlo)
+    cost = mod.entry_cost()
+    return {
+        "transcendentals": cost.transcendentals,
+        "divides": _count_divide_elems(mod),
+        "flops": cost.flops,
+    }
+
+
+def _count_divide_elems(mod: HloModule) -> float:
+    """Trip-aware divide element count (walker tracks transcendentals only)."""
+    from repro.utils.hlo_walker import _first_shape
+
+    def comp_divides(comp: str, seen=None) -> float:
+        total = 0.0
+        for op in mod.computations.get(comp, []):
+            if op.op == "divide":
+                sh = _first_shape(op.result_str)
+                n = 1
+                if sh:
+                    for d in sh[1]:
+                        n *= d
+                total += n
+            trips = 1
+            if op.op == "while":
+                trips = mod._trip_count(op.rest) or 1
+            for sub in mod._called(op.rest):
+                total += comp_divides(sub) * trips
+        return total
+
+    return comp_divides(mod.entry)
+
+
+def run(csv: List[str]) -> None:
+    key = jax.random.PRNGKey(1)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(kk, (B, S, H, D), jnp.float32)
+    v = jax.random.normal(kv, (B, S, H, D), jnp.float32)
+    spec = MaskSpec(causal=True)
+
+    def fa2(q, k, v):
+        return flash_attention_with_lse(
+            q, k, v, spec, block_q=BLOCK, block_kv=BLOCK, mode="dense"
+        )[0]
+
+    def fa1(q, k, v):
+        return flash_v1_attention(q, k, v, spec, block_kv=BLOCK)[0]
+
+    # numerically identical first
+    o1 = jax.jit(fa1)(q, k, v)
+    o2 = jax.jit(fa2)(q, k, v)
+    assert jnp.allclose(o1, o2, atol=1e-5), "FA1/FA2 forward mismatch"
+
+    for name, fn in (("fa1_style", fa1), ("fa2", fa2)):
+        c = _census(fn, q, k, v)
+        jit = jax.jit(fn)
+        jax.block_until_ready(jit(q, k, v))
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(jit(q, k, v))
+        t = (time.perf_counter() - t0) / 5
+        csv.append(
+            f"c1_census/{name},{t*1e6:.0f},"
+            f"transc={c['transcendentals']:.3e};div={c['divides']:.3e};matmul={c['flops']:.3e}"
+        )

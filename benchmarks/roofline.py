@@ -1,0 +1,39 @@
+"""Roofline report: render the dry-run JSONs as the section-(g) table.
+
+Reads experiments/dryrun_singlepod.json (the roofline table is single-pod
+per the brief) and emits one CSV row per (arch x shape) cell with the three
+terms, the dominant bottleneck, useful-FLOPs ratio, and roofline fraction.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+HERE = os.path.dirname(__file__)
+RESULTS = os.path.join(HERE, "..", "experiments", "dryrun_singlepod.json")
+
+
+def run(csv: List[str]) -> None:
+    if not os.path.exists(RESULTS):
+        csv.append("roofline/missing,0,run launch.dryrun first")
+        return
+    with open(RESULTS) as f:
+        data = json.load(f)
+    for key in sorted(data):
+        rec = data[key]
+        if rec.get("status") == "skipped":
+            csv.append(f"roofline/{key},0,skipped: {rec.get('reason','')[:60]}")
+            continue
+        if rec.get("status") != "ok":
+            csv.append(f"roofline/{key},0,{rec.get('status')}")
+            continue
+        rl = rec["roofline"]
+        step_us = max(rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"]) * 1e6
+        csv.append(
+            f"roofline/{key},{step_us:.0f},"
+            f"tc={rl['t_compute_s']:.3e};tm={rl['t_memory_s']:.3e};"
+            f"tcoll={rl['t_collective_s']:.3e};dom={rl['dominant']};"
+            f"useful={rl['useful_ratio']:.3f};frac={rl['roofline_fraction']:.4f}"
+        )

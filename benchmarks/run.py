@@ -1,0 +1,33 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  fig4_6_attn_speed   Fig. 4/5/6 -- attention speed, 3 impls x seq len
+  nonmatmul_census    Section 3.1 C1 -- FA1-vs-FA2 non-matmul FLOP census
+  table1_e2e          Table 1 -- end-to-end GPT training throughput
+  roofline            deliverable (g) -- dry-run roofline table
+
+Prints ``name,us_per_call,derived`` CSV. ``python -m benchmarks.run [names]``
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+ALL = ("fig4_6_attn_speed", "nonmatmul_census", "table1_e2e", "roofline")
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    csv = ["name,us_per_call,derived"]
+    for name in names:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.perf_counter()
+        before = len(csv)
+        mod.run(csv)
+        dt = time.perf_counter() - t0
+        print(f"# {name}: {len(csv) - before} rows in {dt:.1f}s", file=sys.stderr)
+    print("\n".join(csv))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Table 1 analogue: end-to-end GPT-style training throughput.
+
+Paper: GPT3-1.3B/2.7B at 2k/8k context on 8xA100 -- without-flash vs
+FlashAttention vs FlashAttention-2. CPU adaptation: a GPT-style ~20M model
+at two sequence lengths, comparing attention backends
+(ref = "without FlashAttention", flash_xla = FA2). The validated claim is
+the *relative* speedup growing with context, not absolute TFLOPs/s.
+
+Derived column: tokens/s and model-FLOPs/s via the Megatron formula
+(6*N*D + 12*L*h*s^2, as in the paper's Section 4.2).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.attention import AttentionConfig
+from repro.launch.steps import build_train_step
+from repro.models import lm
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.utils import flops as F
+
+GPT_SMALL = ModelConfig(
+    name="gpt-bench-20m",
+    family="dense",
+    num_layers=4,
+    d_model=256,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=64,
+    d_ff=1024,
+    vocab_size=8192,
+    vocab_pad_to=256,
+    dtype="float32",
+    scan_layers=True,
+    remat=False,
+)
+
+SEQS = (512, 2048)
+BATCH_TOKENS = 4096
+
+
+def run(csv: List[str]) -> None:
+    params = lm.init_lm(GPT_SMALL, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    n_params, _ = F.param_count(GPT_SMALL)
+
+    for seq in SEQS:
+        batch_size = max(1, BATCH_TOKENS // seq)
+        batch = {
+            "inputs": jnp.zeros((batch_size, seq), jnp.int32),
+            "targets": jnp.ones((batch_size, seq), jnp.int32),
+        }
+        for impl in ("ref", "flash_xla"):
+            attn_cfg = AttentionConfig(impl=impl, block_q=256, block_kv=256, mode="auto")
+            step = jax.jit(
+                build_train_step(GPT_SMALL, attn_cfg, AdamWConfig(), ce_chunk=512),
+                donate_argnums=(),
+            )
+            p, o, m = step(params, opt, batch)
+            jax.block_until_ready(m["loss"])
+            t0 = time.perf_counter()
+            iters = 3
+            for _ in range(iters):
+                _, _, m = step(params, opt, batch)
+                jax.block_until_ready(m["loss"])
+            t = (time.perf_counter() - t0) / iters
+            toks = batch_size * seq
+            mflops = (
+                6 * n_params * toks
+                + 12 * GPT_SMALL.num_layers * GPT_SMALL.d_model * seq * seq * batch_size
+            )
+            csv.append(
+                f"table1_e2e/{impl}/seq={seq},{t*1e6:.0f},"
+                f"tok_per_s={toks/t:.0f};model_gflops_per_s={mflops/t/1e9:.2f}"
+            )

@@ -1,0 +1,83 @@
+"""Long-context example: windowed flash attention + O(N) SSM decode.
+
+The paper's motivation is scaling context. This example shows the two
+sub-quadratic paths the framework uses for the long_500k shape:
+
+  1. Sliding-window flash attention (gemma3/mixtral style): packed tile
+     scheduling visits only ~(window/block) tiles per row instead of all,
+     validated against the reference on a window-masked computation.
+  2. A hybrid (attention+SSM) reduced hymba config decoding far past its
+     attention window with constant per-token state.
+
+Run:  PYTHONPATH=src python examples/long_context.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core.attention import AttentionConfig
+from repro.core.flash import flash_attention
+from repro.core.masks import MaskSpec
+from repro.kernels.ref import attention_reference
+from repro.launch.steps import build_prefill_step, build_serve_step
+
+
+def windowed_flash():
+    B, S, H, D, W = 1, 2048, 2, 64, 256
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(kk, (B, S, H, D), jnp.float32)
+    v = jax.random.normal(kv, (B, S, H, D), jnp.float32)
+
+    spec = MaskSpec(causal=True, window=W)
+    o_ref = attention_reference(q, k, v, spec)[0]
+
+    dense = jax.jit(lambda q, k, v: flash_attention(
+        q, k, v, MaskSpec(causal=True), block_q=128, block_kv=128, mode="dense"))
+    packed = jax.jit(lambda q, k, v: flash_attention(
+        q, k, v, spec, block_q=128, block_kv=128, mode="packed"))
+
+    o = packed(q, k, v)
+    err = float(jnp.abs(o - o_ref).max())
+    print(f"[1] windowed packed flash vs ref: max|err| = {err:.2e}")
+    assert err < 1e-5
+
+    for name, fn in (("dense/causal", dense), ("packed/window", packed)):
+        jax.block_until_ready(fn(q, k, v))
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(fn(q, k, v))
+        print(f"    {name:14s} {(time.perf_counter()-t0)/3*1e3:8.1f} ms")
+
+
+def hybrid_long_decode():
+    cfg = registry.reduce_config(registry.get("hymba-1.5b"))
+    params = __import__("repro.models.lm", fromlist=["lm"]).init_lm(
+        cfg, jax.random.PRNGKey(1))
+    attn_cfg = AttentionConfig(impl="flash_xla", block_q=64, block_kv=64,
+                               decode_splits=4)
+    cache = 512  # far beyond the reduced window of 32
+    prefill = jax.jit(build_prefill_step(cfg, attn_cfg, cache_size=cache))
+    step = jax.jit(build_serve_step(cfg, attn_cfg))
+
+    tok, caches, lens = prefill(params, {"inputs": jnp.ones((1, 16), jnp.int32)})
+    n_new = 64
+    for _ in range(n_new):
+        tok, caches = step(params, tok, caches, lens)
+        lens = lens + 1
+        assert bool(jnp.isfinite(tok).all())
+    print(f"[2] {cfg.name}: decoded {n_new} tokens past window={cfg.window} "
+          f"(SSM state is O(1)/token); final len {int(lens[0])}")
+
+
+def main():
+    windowed_flash()
+    hybrid_long_decode()
+    print("long_context OK")
+
+
+if __name__ == "__main__":
+    main()

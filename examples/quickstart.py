@@ -1,0 +1,70 @@
+"""Quickstart: the FlashAttention-2 stack in 60 seconds.
+
+1. Call the three interchangeable attention backends and check they agree.
+2. Differentiate through flash attention (Algorithm 2 backward).
+3. Run one training step of an assigned architecture's reduced config.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core.attention import AttentionConfig, attention
+from repro.core.masks import MaskSpec
+from repro.launch.steps import build_train_step
+from repro.models import lm
+from repro.training.optimizer import AdamWConfig, init_opt_state
+
+
+def main():
+    # --- 1. three backends, one answer -------------------------------
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    B, S, H, D = 2, 512, 4, 64
+    q = jax.random.normal(kq, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(kk, (B, S, H, D), jnp.float32)
+    v = jax.random.normal(kv, (B, S, H, D), jnp.float32)
+    spec = MaskSpec(causal=True)
+
+    outs = {}
+    for impl in ("ref", "flash_xla", "flash_pallas"):
+        cfg = AttentionConfig(impl=impl, block_q=128, block_kv=128)
+        outs[impl] = attention(q, k, v, spec, cfg)
+    err_xla = float(jnp.abs(outs["ref"] - outs["flash_xla"]).max())
+    err_pl = float(jnp.abs(outs["ref"] - outs["flash_pallas"]).max())
+    print(f"[1] flash_xla vs ref max|err| = {err_xla:.2e}   "
+          f"flash_pallas vs ref max|err| = {err_pl:.2e}")
+    assert err_xla < 1e-5 and err_pl < 1e-5
+
+    # --- 2. exact gradients through the flash backward ----------------
+    f = lambda q: attention(q, k, v, spec, AttentionConfig(impl="flash_xla",
+                                                           block_q=128, block_kv=128)).sum()
+    g = lambda q: attention(q, k, v, spec, AttentionConfig(impl="ref")).sum()
+    dq_flash = jax.grad(f)(q)
+    dq_ref = jax.grad(g)(q)
+    err_g = float(jnp.abs(dq_flash - dq_ref).max())
+    print(f"[2] dQ flash vs ref max|err| = {err_g:.2e}")
+    assert err_g < 1e-4
+
+    # --- 3. one train step of a real (reduced) architecture -----------
+    cfg = registry.reduce_config(registry.get("qwen3-8b"))
+    params = lm.init_lm(cfg, jax.random.PRNGKey(1))
+    opt = init_opt_state(params)
+    step = jax.jit(build_train_step(
+        cfg, AttentionConfig(impl="flash_xla", block_q=64, block_kv=64),
+        AdamWConfig(),
+    ))
+    batch = {
+        "inputs": jnp.zeros((2, 64), jnp.int32),
+        "targets": jnp.ones((2, 64), jnp.int32),
+    }
+    _, _, metrics = step(params, opt, batch)
+    print(f"[3] {cfg.name}: one train step, loss = {float(metrics['loss']):.4f}")
+    assert jnp.isfinite(metrics["loss"])
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

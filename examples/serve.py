@@ -1,0 +1,52 @@
+"""Serving example: continuous batching with split-KV flash decode.
+
+Builds a reduced qwen3-style model, submits a mixed bag of requests with
+different prompt/output lengths, and drives the slot-based engine. Checks
+that every request completes and that batched decode agrees with a
+sequential re-run of one request.
+
+Run:  PYTHONPATH=src python examples/serve.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core.attention import AttentionConfig
+from repro.models import lm
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    cfg = registry.reduce_config(registry.get("qwen3-8b"))
+    params = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    attn_cfg = AttentionConfig(impl="flash_xla", block_q=64, block_kv=64,
+                               decode_splits=4)
+
+    engine = ServingEngine(cfg, params, attn_cfg, max_batch=3, cache_size=128)
+    prompts = [
+        [5, 9, 2, 7],
+        [11, 3],
+        [8, 8, 8, 1, 2, 3],
+        [4, 4, 4, 4],
+        [1, 2],
+    ]
+    for i, p in enumerate(prompts):
+        engine.submit(Request(rid=i, prompt=p, max_new_tokens=8))
+    finished = engine.run(max_ticks=200)
+    assert len(finished) == len(prompts), f"{len(finished)}/{len(prompts)} finished"
+    for rid in sorted(finished):
+        req = finished[rid]
+        print(f"req {rid}: prompt {req.prompt} -> generated {req.generated}")
+
+    # consistency: slot-batched decode == single-request rerun
+    solo = ServingEngine(cfg, params, attn_cfg, max_batch=1, cache_size=128)
+    solo.submit(Request(rid=99, prompt=prompts[0], max_new_tokens=8))
+    ref = solo.run(max_ticks=50)[99].generated
+    assert ref == finished[0].generated, (ref, finished[0].generated)
+    print(f"batched == solo for request 0: {ref}")
+    print("serve OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""The paper's primary contribution: the FlashAttention-2 stack.
+
+masks.py / online_softmax.py   symbolic masks + the associative combine algebra
+flash.py                        FA2 fwd/bwd as XLA scans (packed causal tiles)
+flash_v1.py                     FA1-style baseline (for the C1 comparison)
+decode.py                       split-KV flash decode (C2 applied to inference)
+attention.py                    backend-dispatching public API
+"""
+
+from repro.core.attention import AttentionConfig, attention, decode_attention
+from repro.core.flash import FlashConfig, flash_attention, flash_attention_with_lse
+from repro.core.masks import CAUSAL, FULL, MaskSpec
+
+__all__ = [
+    "AttentionConfig",
+    "attention",
+    "decode_attention",
+    "FlashConfig",
+    "flash_attention",
+    "flash_attention_with_lse",
+    "MaskSpec",
+    "CAUSAL",
+    "FULL",
+]

@@ -1,0 +1,85 @@
+"""Unified attention entry point -- the framework's first-class feature.
+
+Every model in ``repro.models`` calls :func:`attention` / :func:`decode_attention`;
+the backend is selected by config, never by model code:
+
+  impl = 'ref'           naive O(N^2)-memory attention (oracle / paper baseline)
+  impl = 'flash_xla'     FA2 algorithm as XLA scans (CPU + dry-run path)
+  impl = 'flash_pallas'  FA2 Pallas TPU kernel (interpret=True on CPU)
+
+All three are exact and interchangeable; tests assert pairwise agreement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import flash as _flash
+from repro.core import decode as _decode
+from repro.core.masks import MaskSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    impl: str = "flash_xla"  # 'ref' | 'flash_xla' | 'flash_pallas'
+    block_q: int = 512
+    block_kv: int = 512
+    mode: str = "auto"  # tile schedule for flash_xla: 'dense' | 'packed' | 'auto'
+    decode_splits: int = 8
+    interpret: bool = True  # Pallas interpret mode (True on CPU, False on TPU)
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    spec: MaskSpec,
+    cfg: AttentionConfig = AttentionConfig(),
+    *,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Differentiable attention. q (B,Sq,Hq,D); k/v (B,Skv,Hkv,D) GQA."""
+    if cfg.impl == "ref":
+        from repro.kernels.ref import attention_reference
+
+        return attention_reference(q, k, v, spec, scale=scale)[0]
+    if cfg.impl == "flash_xla":
+        return _flash.flash_attention(
+            q, k, v, spec, scale=scale, block_q=cfg.block_q, block_kv=cfg.block_kv, mode=cfg.mode
+        )
+    if cfg.impl == "flash_pallas":
+        from repro.kernels.ops import flash_attention_pallas
+
+        return flash_attention_pallas(
+            q, k, v, spec, scale=scale, block_q=cfg.block_q, block_kv=cfg.block_kv,
+            interpret=cfg.interpret,
+        )
+    raise ValueError(f"unknown attention impl: {cfg.impl}")
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    cache_length: jnp.ndarray,
+    cfg: AttentionConfig = AttentionConfig(),
+    *,
+    window: Optional[int] = None,
+    sink: int = 0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Single-token decode against a padded KV cache. Returns (B,1,Hq,D)."""
+    if cfg.impl == "flash_pallas":
+        from repro.kernels.ops import flash_decode_pallas
+
+        return flash_decode_pallas(
+            q, k_cache, v_cache, cache_length, window=window, sink=sink, scale=scale,
+            num_splits=cfg.decode_splits, interpret=cfg.interpret,
+        )[0]
+    return _decode.flash_decode(
+        q, k_cache, v_cache, cache_length, window=window, sink=sink, scale=scale,
+        num_splits=cfg.decode_splits,
+    )[0]

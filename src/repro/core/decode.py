@@ -1,0 +1,88 @@
+"""Split-KV flash decode: FA2's sequence-dimension parallelism (C2) applied
+to autoregressive inference.
+
+At decode there is a single query per sequence, so the (batch x heads) grid
+alone under-fills the device exactly as the paper describes for long
+sequences. The fix is the paper's: split the *KV* axis into ``num_splits``
+chunks, compute a locally-normalized (o_i, lse_i) per chunk in parallel, and
+merge with the associative online-softmax combine
+(``online_softmax.combine_lse_outputs``). The same function serves as the
+merge step for mesh-level context-parallel decode (KV cache sharded over the
+`model` axis -- see distributed/context_parallel.py).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.masks import DEFAULT_MASK_VALUE, MaskSpec
+from repro.core.online_softmax import combine_lse_outputs
+
+
+def flash_decode(
+    q: jnp.ndarray,  # (B, 1, Hq, D) -- single new token per sequence
+    k_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    v_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    cache_length: jnp.ndarray,  # (B,) int32: number of valid cache entries
+    *,
+    window: Optional[int] = None,
+    sink: int = 0,
+    scale: Optional[float] = None,
+    num_splits: int = 8,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact attention of one query against a (padded) KV cache.
+
+    The query attends to cache positions [max(0, L - window), L) where
+    L = cache_length[b] (the query sits at position L - 1 *after* the new
+    token's KV has been appended -- append before calling).
+
+    Returns (o (B, 1, Hq, D), lse (B, Hq, 1)).
+    """
+    B, one, Hq, D = q.shape
+    assert one == 1, "flash_decode is a single-step primitive; loop outside"
+    _, S, Hk, _ = k_cache.shape
+    G = Hq // Hk
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    ns = num_splits
+    while S % ns != 0:  # static; S is padded cache capacity
+        ns -= 1
+    sc = S // ns
+
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Hk, G, D)
+    kc = k_cache.transpose(0, 2, 1, 3).reshape(B, Hk, ns, sc, D)
+    vc = v_cache.transpose(0, 2, 1, 3).reshape(B, Hk, ns, sc, D)
+
+    # (B, Hk, G, ns, sc): every split computed in parallel -- C2 for decode.
+    s = jnp.einsum("bhgd,bhcsd->bhgcs", qf, kc.astype(qf.dtype))
+    pos = jnp.arange(S, dtype=jnp.int32).reshape(ns, sc)
+    valid = pos[None] < cache_length[:, None, None]  # (B, ns, sc)
+    if window is not None:
+        in_win = pos[None] >= (cache_length[:, None, None] - window)
+        if sink:
+            in_win = in_win | (pos[None] < sink)
+        valid = valid & in_win
+    s = jnp.where(valid[:, None, None], s, DEFAULT_MASK_VALUE)
+
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    # Zero fully-masked splits (their m == MASK_VALUE -> p == 1 garbage).
+    any_valid = jnp.any(valid, axis=-1)[:, None, None]  # (B, 1, 1, ns)
+    l = jnp.where(any_valid, jnp.sum(p, axis=-1), 0.0)
+    o_part = jnp.einsum("bhgcs,bhcsd->bhgcd", p.astype(v_cache.dtype), vc,
+                        preferred_element_type=jnp.float32)
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o_part = o_part / l_safe[..., None]
+    lse_part = jnp.where(l == 0.0, -jnp.inf, m + jnp.log(l_safe))
+
+    # Merge the splits: associative combine over axis `ns`.
+    o_parts = jnp.moveaxis(o_part, 3, 0)  # (ns, B, Hk, G, D)
+    lse_parts = jnp.moveaxis(lse_part, 3, 0)  # (ns, B, Hk, G)
+    o, lse = combine_lse_outputs(o_parts, lse_parts)
+    return (
+        o.reshape(B, 1, Hq, D).astype(q.dtype),
+        lse.reshape(B, Hq, 1),
+    )

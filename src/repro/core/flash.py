@@ -1,0 +1,535 @@
+"""FlashAttention-2 as an XLA program (lax.scan over tiles).
+
+This is the *algorithmic* reproduction of the paper, independent of the
+Pallas kernels in ``repro.kernels``:
+
+  * C1a -- the output accumulator is kept **un-rescaled** through the KV
+    loop; we multiply by ``diag(l)^-1`` exactly once at the end
+    (``online_softmax.finalize``).
+  * C1b -- only the logsumexp ``L = m + log(l)`` is saved for the backward
+    pass (not both m and l); the backward recomputes ``P = exp(S - L)``
+    (Algorithm 2, line 11).
+  * C2  -- causal/window **block skipping**: in ``packed`` mode the scan
+    iterates only over visible (q_block, kv_block) tile pairs -- the FLOPs
+    XLA sees drop by ~2x for causal (and by ~S/w for windows), mirroring
+    the paper's Section 3.1 "skip blocks above the diagonal".
+  * The backward is the paper's Algorithm 2 (5 matmuls, recompute-from-LSE).
+    TPU adaptation: instead of atomic adds into dQ, tiles accumulate into a
+    carried dQ buffer inside a sequential scan (and across the mesh the
+    q-block axis is *sharded*, which is the actual parallelism -- see
+    distributed/context_parallel.py).
+
+Why an XLA flash at all, when kernels/ has Pallas? (a) it is the CPU
+execution path and the dry-run path where ``cost_analysis()`` must see real
+FLOPs; (b) it is the oracle-adjacent reference for the kernels; (c) on TPU
+it is a respectable fallback (XLA fuses the exp/max chain into the matmul
+epilogue reasonably well). One config flag flips to the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.masks import DEFAULT_MASK_VALUE, MaskSpec, make_tile_mask, tile_visibility
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashConfig:
+    spec: MaskSpec = MaskSpec()
+    block_q: int = 512
+    block_kv: int = 512
+    mode: str = "auto"  # 'dense' | 'packed' | 'auto'
+    scale: Optional[float] = None  # default 1/sqrt(D)
+
+    def resolve_mode(self, t_q: int, t_kv: int) -> str:
+        if self.mode != "auto":
+            return self.mode
+        if self.spec.is_trivial:
+            return "dense"
+        pairs = _visible_pairs(self.spec, t_q, t_kv, self.block_q, self.block_kv)
+        # packed pays a gather/scatter per tile; require a real FLOP win.
+        return "packed" if len(pairs[0]) <= 0.75 * t_q * t_kv else "dense"
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, block: int) -> Tuple[jnp.ndarray, int]:
+    pad = (-x.shape[axis]) % block
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x, pad
+
+
+def _visible_pairs(spec: MaskSpec, t_q: int, t_kv: int, bq: int, bk: int):
+    """Static (i, j) tile pairs that are not fully masked (row-major)."""
+    ii, jj = [], []
+    for i in range(t_q):
+        q_lo = i * bq + spec.q_offset
+        for j in range(t_kv):
+            if tile_visibility(spec, q_lo, q_lo + bq, j * bk, j * bk + bk) != "empty":
+                ii.append(i)
+                jj.append(j)
+    return np.asarray(ii, np.int32), np.asarray(jj, np.int32)
+
+
+def _classified_pairs(spec: MaskSpec, t_q: int, t_kv: int, bq: int, bk: int, sk: int):
+    """Visible tile pairs split into interior (fully visible -- the mask
+    apply is skipped, FA2 Section 3.1 point 2) and boundary (partial, or
+    touching KV padding). Returns ((ii_f, jj_f), (ii_p, jj_p))."""
+    f_ii, f_jj, p_ii, p_jj = [], [], [], []
+    for i in range(t_q):
+        q_lo = i * bq + spec.q_offset
+        for j in range(t_kv):
+            vis = tile_visibility(spec, q_lo, q_lo + bq, j * bk, j * bk + bk)
+            if vis == "empty":
+                continue
+            if vis == "full" and (j + 1) * bk <= sk:
+                f_ii.append(i)
+                f_jj.append(j)
+            else:
+                p_ii.append(i)
+                p_jj.append(j)
+    return (
+        (np.asarray(f_ii, np.int32), np.asarray(f_jj, np.int32)),
+        (np.asarray(p_ii, np.int32), np.asarray(p_jj, np.int32)),
+    )
+
+
+def _blocked(q, k, v, cfg: FlashConfig):
+    """Normalize to blocked layout. Returns dict of blocked tensors + meta.
+
+    Layout keeps batch and heads as SEPARATE einsum dims -- q (B, Hk, G,
+    Sq, D), k/v (B, Hk, Sk, D). Merging them into one N = B*Hk dim (the
+    usual kernel convenience) defeats XLA SPMD: a dim built by merging a
+    'data'-sharded batch with a 'model'-sharded head axis cannot be
+    sharded, and the whole attention computation silently replicates
+    (measured 16x redundant compute on granite/qwen3 -- EXPERIMENTS.md
+    Section Perf iterations G1/G2)."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hk, _ = k.shape
+    assert Hq % Hk == 0, f"GQA requires Hq % Hkv == 0, got {Hq} % {Hk}"
+    G = Hq // Hk
+    scale = cfg.scale if cfg.scale is not None else 1.0 / math.sqrt(D)
+    bq = min(cfg.block_q, max(Sq, 1))
+    bk = min(cfg.block_kv, max(Sk, 1))
+
+    # (B, Sq, Hk, G, D) -> (B, Hk, G, Sq, D)
+    qt = q.reshape(B, Sq, Hk, G, D).transpose(0, 2, 3, 1, 4)
+    kt = k.transpose(0, 2, 1, 3)  # (B, Hk, Sk, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    qt, pad_q = _pad_axis(qt, 3, bq)
+    kt, pad_k = _pad_axis(kt, 2, bk)
+    vt, _ = _pad_axis(vt, 2, bk)
+    t_q, t_kv = qt.shape[3] // bq, kt.shape[2] // bk
+
+    # Pre-scale q (C1 spirit: O(N d) multiplies instead of O(N^2)).
+    qt = (qt.astype(jnp.float32) * scale).astype(q.dtype)
+    return dict(
+        q=qt, k=kt, v=vt, B=B, Sq=Sq, Sk=Sk, Hq=Hq, Hk=Hk, G=G, D=D,
+        bq=bq, bk=bk, t_q=t_q, t_kv=t_kv, pad_q=pad_q, pad_k=pad_k, scale=scale,
+    )
+
+
+def _tile_scores(q_blk, k_blk):
+    # (B, H, G, bq, D) x (B, H, bk, D) -> (B, H, G, bq, bk), fp32 accumulation.
+    return jnp.einsum("bhgqd,bhkd->bhgqk", q_blk, k_blk, preferred_element_type=jnp.float32)
+
+
+def _tile_mask_bias(spec: MaskSpec, i, j, bq, bk, sq, sk):
+    """(bq, bk) bool mask for tile (i, j); i/j may be traced. None if trivial
+    and no KV padding can intrude."""
+    q_ids = i * bq + jnp.arange(bq, dtype=jnp.int32) + spec.q_offset
+    kv_ids = j * bk + jnp.arange(bk, dtype=jnp.int32)
+    mask = make_tile_mask(spec, q_ids, kv_ids)
+    if sk % bk != 0:
+        pad_ok = kv_ids < sk
+        mask = pad_ok[None, :] if mask is None else (mask & pad_ok[None, :])
+    return mask
+
+
+def _update(m, l, acc, s, v_blk, mask, p_dtype):
+    """One online-softmax tile update (FA2 Algorithm 1, lines 8-10)."""
+    if mask is not None:
+        s = jnp.where(mask, s, DEFAULT_MASK_VALUE)
+    m_tile = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m, m_tile)
+    alpha = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_new))
+    p = jnp.exp(s - m_new[..., None])
+    l_new = l * alpha + jnp.sum(p, axis=-1)
+    pv = jnp.einsum(
+        "bhgqk,bhkd->bhgqd", p.astype(p_dtype), v_blk, preferred_element_type=jnp.float32
+    )
+    acc_new = acc * alpha[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def _finalize(m, l, acc):
+    """C1a: the single end-of-loop rescale by diag(l)^-1 (+ LSE for bwd)."""
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o = acc / l_safe[..., None]
+    lse = jnp.where(l == 0.0, -jnp.inf, m + jnp.log(l_safe))
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd(q, k, v, cfg: FlashConfig):
+    bl = _blocked(q, k, v, cfg)
+    mode = cfg.resolve_mode(bl["t_q"], bl["t_kv"])
+    if mode == "packed":
+        o, lse = _fwd_packed(bl, cfg)
+    else:
+        o, lse = _fwd_dense(bl, cfg)
+    # Back to (B, Sq, Hq, D) / (B, Hq, Sq).
+    B, Hk, G, Sq, Hq, D = bl["B"], bl["Hk"], bl["G"], bl["Sq"], bl["Hq"], bl["D"]
+    o = o[:, :, :, :Sq].transpose(0, 3, 1, 2, 4)
+    o = o.reshape(B, Sq, Hq, D).astype(q.dtype)
+    lse = lse[:, :, :, :Sq].reshape(B, Hk * G, Sq)
+    return o, lse
+
+
+def _fwd_dense(bl, cfg: FlashConfig):
+    B, Hk, G, Sqp, D = bl["q"].shape
+    bq, bk, t_kv = bl["bq"], bl["bk"], bl["t_kv"]
+    p_dtype = bl["v"].dtype
+    k_blocks = bl["k"].reshape(B, Hk, t_kv, bk, D).transpose(2, 0, 1, 3, 4)
+    v_blocks = bl["v"].reshape(B, Hk, t_kv, bk, D).transpose(2, 0, 1, 3, 4)
+    spec = cfg.spec
+
+    q_all = bl["q"]  # (B, Hk, G, Sqp, D)
+    q_ids = jnp.arange(Sqp, dtype=jnp.int32) + spec.q_offset
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_j, v_j, j = xs
+        s = _tile_scores(q_all, k_j)
+        kv_ids = j * bk + jnp.arange(bk, dtype=jnp.int32)
+        mask = make_tile_mask(spec, q_ids, kv_ids)
+        if bl["pad_k"]:
+            ok = kv_ids < bl["Sk"]
+            mask = ok[None, :] if mask is None else (mask & ok[None, :])
+        m, l, acc = _update(m, l, acc, s, v_j, mask, p_dtype)
+        return (m, l, acc), None
+
+    m0 = jnp.full((B, Hk, G, Sqp), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hk, G, Sqp), jnp.float32)
+    a0 = jnp.zeros((B, Hk, G, Sqp, D), jnp.float32)
+    with jax.named_scope("fa2scan"):  # tagged: kernel-substituted roofline
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (k_blocks, v_blocks, jnp.arange(t_kv, dtype=jnp.int32))
+        )
+    return _finalize(m, l, acc)
+
+
+def _fwd_packed(bl, cfg: FlashConfig):
+    """Triangular tile packing: scans over visible (i, j) tile pairs.
+
+    The carried state holds (m, l, acc) for *every* q block -- O(N d) memory,
+    same as the output -- and each step touches one (bq x bk) tile. Total
+    matmul FLOPs equal the number of visible tiles: the causal/window block
+    skipping of FA2 Section 3.1, but expressed so that XLA (and therefore
+    cost_analysis and the roofline) sees the reduction.
+
+    Two scans (Section 3.1 point 2): interior tiles (fully visible -- no
+    mask is built or applied, saving one S-tile-sized select per step) run
+    first, then boundary tiles with the mask. Online-softmax combining is
+    order-independent, so the split does not change the result.
+    """
+    B, Hk, G, Sqp, D = bl["q"].shape
+    bq, bk, t_q, t_kv = bl["bq"], bl["bk"], bl["t_q"], bl["t_kv"]
+    p_dtype = bl["v"].dtype
+    spec = cfg.spec
+    (ii_f, jj_f), (ii_p, jj_p) = _classified_pairs(spec, t_q, t_kv, bq, bk, bl["Sk"])
+
+    q_blocks = bl["q"].reshape(B, Hk, G, t_q, bq, D).transpose(3, 0, 1, 2, 4, 5)
+    k_blocks = bl["k"].reshape(B, Hk, t_kv, bk, D).transpose(2, 0, 1, 3, 4)
+    v_blocks = bl["v"].reshape(B, Hk, t_kv, bk, D).transpose(2, 0, 1, 3, 4)
+
+    def make_body(masked: bool):
+        def body(carry, xs):
+            m, l, acc = carry  # (t_q, B, Hk, G, bq[, D])
+            i, j = xs
+            q_i = jax.lax.dynamic_index_in_dim(q_blocks, i, 0, keepdims=False)
+            k_j = jax.lax.dynamic_index_in_dim(k_blocks, j, 0, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(v_blocks, j, 0, keepdims=False)
+            s = _tile_scores(q_i, k_j)
+            mask = (
+                _tile_mask_bias(spec, i, j, bq, bk, Sqp, bl["Sk"]) if masked else None
+            )
+            m_i = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
+            l_i = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
+            a_i = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
+            m_i, l_i, a_i = _update(m_i, l_i, a_i, s, v_j, mask, p_dtype)
+            m = jax.lax.dynamic_update_index_in_dim(m, m_i, i, 0)
+            l = jax.lax.dynamic_update_index_in_dim(l, l_i, i, 0)
+            acc = jax.lax.dynamic_update_index_in_dim(acc, a_i, i, 0)
+            return (m, l, acc), None
+
+        return body
+
+    m0 = jnp.full((t_q, B, Hk, G, bq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((t_q, B, Hk, G, bq), jnp.float32)
+    a0 = jnp.zeros((t_q, B, Hk, G, bq, D), jnp.float32)
+    carry = (m0, l0, a0)
+    with jax.named_scope("fa2scan"):  # tagged: kernel-substituted roofline
+        if len(ii_f):
+            carry, _ = jax.lax.scan(
+                make_body(False), carry, (jnp.asarray(ii_f), jnp.asarray(jj_f))
+            )
+        if len(ii_p):
+            carry, _ = jax.lax.scan(
+                make_body(True), carry, (jnp.asarray(ii_p), jnp.asarray(jj_p))
+            )
+    m, l, acc = carry
+    o, lse = _finalize(
+        m.transpose(1, 2, 3, 0, 4).reshape(B, Hk, G, Sqp),
+        l.transpose(1, 2, 3, 0, 4).reshape(B, Hk, G, Sqp),
+        acc.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hk, G, Sqp, D),
+    )
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward: the paper's Algorithm 2 over the same visible-tile schedule.
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dense_unblocked(bl, q, k, v, o, lse, do, cfg: FlashConfig):
+    """Algorithm 2 with the KV loop outer and Q whole (context-parallel
+    friendly). Same 5 matmuls per block; dQ accumulates in a carried fp32
+    buffer (the TPU adaptation of the paper's atomic-add dQ)."""
+    B, Hk, G, Sqp, D = bl["q"].shape
+    bk, t_kv = bl["bk"], bl["t_kv"]
+    Sq, Sk, scale = bl["Sq"], bl["Sk"], bl["scale"]
+    spec = cfg.spec
+    in_dtype = q.dtype
+
+    def to_bhgs(x, Hn):  # (B, S, H, D) -> (B, Hk, G, Sqp, D) fp32
+        _, S, _, _ = x.shape
+        y = x.reshape(B, S, Hk, Hn // Hk, D).transpose(0, 2, 3, 1, 4)
+        y, _ = _pad_axis(y, 3, bl["bq"])
+        return y
+
+    do_b = to_bhgs(do, bl["Hq"]).astype(jnp.float32)
+    o_b = to_bhgs(o, bl["Hq"]).astype(jnp.float32)
+    delta = jnp.sum(do_b * o_b, axis=-1)  # (B, Hk, G, Sqp): Alg 2 line 4
+    lse_b = lse.reshape(B, Hk, G, Sq)
+    lse_b, _ = _pad_axis(lse_b, 3, bl["bq"])
+    lse_b = jnp.where(jnp.isneginf(lse_b), 0.0, lse_b)
+
+    q_all = bl["q"]  # (B, Hk, G, Sqp, D), pre-scaled
+    k_blocks = bl["k"].reshape(B, Hk, t_kv, bk, D).transpose(2, 0, 1, 3, 4)
+    v_blocks = bl["v"].reshape(B, Hk, t_kv, bk, D).transpose(2, 0, 1, 3, 4)
+    q_ids = jnp.arange(Sqp, dtype=jnp.int32) + spec.q_offset
+
+    def body(dq, xs):
+        k_j, v_j, j = xs
+        s = _tile_scores(q_all, k_j)
+        kv_ids = j * bk + jnp.arange(bk, dtype=jnp.int32)
+        mask = make_tile_mask(spec, q_ids, kv_ids)
+        if bl["pad_k"]:
+            ok = kv_ids < Sk
+            mask = ok[None, :] if mask is None else (mask & ok[None, :])
+        if mask is not None:
+            s = jnp.where(mask, s, DEFAULT_MASK_VALUE)
+        p = jnp.exp(s - lse_b[..., None])  # line 11: recompute from LSE only
+        dv_j = jnp.einsum("bhgqk,bhgqd->bhkd", p, do_b, preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", do_b, v_j, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None])  # line 14
+        dq = dq + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", ds.astype(in_dtype), k_j, preferred_element_type=jnp.float32
+        )
+        dk_j = jnp.einsum(
+            "bhgqk,bhgqd->bhkd", ds.astype(in_dtype), q_all, preferred_element_type=jnp.float32
+        )
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, Hk, G, Sqp, D), jnp.float32)
+    with jax.named_scope("fa2scan"):  # tagged: kernel-substituted roofline
+        dq, (dk, dv) = jax.lax.scan(
+            body, dq0, (k_blocks, v_blocks, jnp.arange(t_kv, dtype=jnp.int32))
+        )
+
+    dq = dq[:, :, :, :Sq].transpose(0, 3, 1, 2, 4)
+    dq = dq.reshape(B, Sq, bl["Hq"], D) * scale
+    def from_kv(x):  # (t_kv, B, Hk, bk, D) -> (B, Sk, Hk, D)
+        y = x.transpose(1, 2, 0, 3, 4).reshape(B, Hk, t_kv * bk, D)[:, :, :Sk]
+        return y.transpose(0, 2, 1, 3)
+
+    return dq.astype(q.dtype), from_kv(dk).astype(k.dtype), from_kv(dv).astype(v.dtype)
+
+
+def _bwd_impl(q, k, v, o, lse, do, cfg: FlashConfig):
+    bl = _blocked(q, k, v, cfg)  # note: bl['q'] is pre-scaled by `scale`
+    B, Hk, G, Sqp, D = bl["q"].shape
+    bq, bk, t_q, t_kv = bl["bq"], bl["bk"], bl["t_q"], bl["t_kv"]
+    Sq, Sk, scale = bl["Sq"], bl["Sk"], bl["scale"]
+    spec = cfg.spec
+
+    mode = cfg.resolve_mode(t_q, t_kv)
+    if mode != "packed":
+        # Dense backward keeps Q *unblocked*: one scan over KV blocks, dQ
+        # carried whole, (dK_j, dV_j) emitted as stacked scan outputs. No
+        # dynamic indexing touches the (possibly sequence-sharded) Q axis,
+        # so under context parallelism XLA SPMD keeps every tensor sharded
+        # (the blocked formulation forced a full f32 all-gather of q_blocks
+        # on every tile step -- see EXPERIMENTS.md Section Perf, deepseek).
+        return _bwd_dense_unblocked(bl, q, k, v, o, lse, do, cfg)
+    (ii_f, jj_f), (ii_p, jj_p) = _classified_pairs(spec, t_q, t_kv, bq, bk, Sk)
+
+    def to_bhgs(x, Hn):  # (B, S, H, D) -> (B, Hk, G, Sqp, D)
+        _, S, _, _ = x.shape
+        y = x.reshape(B, S, Hk, Hn // Hk, D).transpose(0, 2, 3, 1, 4)
+        y, _ = _pad_axis(y, 3, bq)
+        return y
+
+    do_b = to_bhgs(do, bl["Hq"]).astype(jnp.float32)
+    o_b = to_bhgs(o, bl["Hq"]).astype(jnp.float32)
+    # D = rowsum(dO o O)  (Algorithm 2, line 4)
+    delta = jnp.sum(do_b * o_b, axis=-1)  # (B, Hk, G, Sqp)
+    lse_b = lse.reshape(B, Hk, G, Sq)
+    lse_b, _ = _pad_axis(lse_b, 3, bq)
+    lse_b = jnp.where(jnp.isneginf(lse_b), 0.0, lse_b)
+
+    q_blocks = bl["q"].reshape(B, Hk, G, t_q, bq, D).transpose(3, 0, 1, 2, 4, 5)
+    k_blocks = bl["k"].reshape(B, Hk, t_kv, bk, D).transpose(2, 0, 1, 3, 4)
+    v_blocks = bl["v"].reshape(B, Hk, t_kv, bk, D).transpose(2, 0, 1, 3, 4)
+    do_blocks = do_b.reshape(B, Hk, G, t_q, bq, D).transpose(3, 0, 1, 2, 4, 5)
+    lse_blocks = lse_b.reshape(B, Hk, G, t_q, bq).transpose(3, 0, 1, 2, 4)
+    delta_blocks = delta.reshape(B, Hk, G, t_q, bq).transpose(3, 0, 1, 2, 4)
+    in_dtype = q.dtype
+
+    def make_body(masked: bool):
+        def body(carry, xs):
+            dq, dk, dv = carry
+            i, j = xs
+            q_i = jax.lax.dynamic_index_in_dim(q_blocks, i, 0, keepdims=False)
+            do_i = jax.lax.dynamic_index_in_dim(do_blocks, i, 0, keepdims=False)
+            lse_i = jax.lax.dynamic_index_in_dim(lse_blocks, i, 0, keepdims=False)
+            dl_i = jax.lax.dynamic_index_in_dim(delta_blocks, i, 0, keepdims=False)
+            k_j = jax.lax.dynamic_index_in_dim(k_blocks, j, 0, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(v_blocks, j, 0, keepdims=False)
+
+            s = _tile_scores(q_i, k_j)  # q pre-scaled -> s is scaled scores
+            if masked:
+                mask = _tile_mask_bias(spec, i, j, bq, bk, Sqp, Sk)
+                if mask is not None:
+                    s = jnp.where(mask, s, DEFAULT_MASK_VALUE)
+            p = jnp.exp(s - lse_i[..., None])  # line 11: recompute from LSE only
+            # dV_j += P^T dO_i    (line 12; sums over G: GQA grad note, Sec 3.1)
+            dv_j = jnp.einsum("bhgqk,bhgqd->bhkd", p, do_i, preferred_element_type=jnp.float32)
+            # dP = dO_i V_j^T     (line 13)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", do_i, v_j, preferred_element_type=jnp.float32)
+            # dS = P o (dP - D_i) (line 14)
+            ds = p * (dp - dl_i[..., None])
+            # dQ_i += dS K_j      (line 15)  [scale folded at the end]
+            dq_i = jnp.einsum("bhgqk,bhkd->bhgqd", ds.astype(in_dtype), k_j, preferred_element_type=jnp.float32)
+            # dK_j += dS^T Q_i    (line 16)
+            dk_j = jnp.einsum("bhgqk,bhgqd->bhkd", ds.astype(in_dtype), q_i, preferred_element_type=jnp.float32)
+
+            dq = jax.lax.dynamic_update_index_in_dim(
+                dq, jax.lax.dynamic_index_in_dim(dq, i, 0, keepdims=False) + dq_i, i, 0
+            )
+            dk = jax.lax.dynamic_update_index_in_dim(
+                dk, jax.lax.dynamic_index_in_dim(dk, j, 0, keepdims=False) + dk_j, j, 0
+            )
+            dv = jax.lax.dynamic_update_index_in_dim(
+                dv, jax.lax.dynamic_index_in_dim(dv, j, 0, keepdims=False) + dv_j, j, 0
+            )
+            return (dq, dk, dv), None
+
+        return body
+
+    dq0 = jnp.zeros((t_q, B, Hk, G, bq, D), jnp.float32)
+    dk0 = jnp.zeros((t_kv, B, Hk, bk, D), jnp.float32)
+    dv0 = jnp.zeros((t_kv, B, Hk, bk, D), jnp.float32)
+    carry = (dq0, dk0, dv0)
+    with jax.named_scope("fa2scan"):  # tagged: kernel-substituted roofline
+        if len(ii_f):
+            carry, _ = jax.lax.scan(
+                make_body(False), carry, (jnp.asarray(ii_f), jnp.asarray(jj_f))
+            )
+        if len(ii_p):
+            carry, _ = jax.lax.scan(
+                make_body(True), carry, (jnp.asarray(ii_p), jnp.asarray(jj_p))
+            )
+    dq, dk, dv = carry
+
+    def from_q_blocks(x):  # (t_q, B, Hk, G, bq, D) -> (B, Sq, Hq, D)
+        y = x.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hk, G, Sqp, D)[:, :, :, :Sq]
+        y = y.transpose(0, 3, 1, 2, 4)
+        return y.reshape(B, Sq, Hk * G, D)
+
+    def from_kv_blocks(x):  # (t_kv, B, Hk, bk, D) -> (B, Sk, Hk, D)
+        y = x.transpose(1, 2, 0, 3, 4).reshape(B, Hk, t_kv * bk, D)[:, :, :Sk]
+        return y.transpose(0, 2, 1, 3)
+
+    # q was pre-scaled: dS was computed w.r.t. scaled scores, so dq here is
+    # d/d(q*scale) -> multiply by scale; dk already correct because q_i used
+    # in line 16 carries the scale.
+    dq = from_q_blocks(dq) * scale
+    return dq.astype(q.dtype), from_kv_blocks(dk).astype(k.dtype), from_kv_blocks(dv).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _flash(q, k, v, cfg: FlashConfig):
+    return _fwd(q, k, v, cfg)[0]
+
+
+def _flash_vjp_fwd(q, k, v, cfg: FlashConfig):
+    o, lse = _fwd(q, k, v, cfg)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_vjp_bwd(cfg: FlashConfig, res, do):
+    q, k, v, o, lse = res
+    return _bwd_impl(q, k, v, o, lse, do, cfg)
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    spec: MaskSpec = MaskSpec(causal=True),
+    *,
+    scale: Optional[float] = None,
+    block_q: int = 512,
+    block_kv: int = 512,
+    mode: str = "auto",
+) -> jnp.ndarray:
+    """Differentiable FlashAttention-2 (XLA path). q (B,Sq,Hq,D); k/v GQA."""
+    cfg = FlashConfig(spec=spec, block_q=block_q, block_kv=block_kv, mode=mode, scale=scale)
+    return _flash(q, k, v, cfg)
+
+
+def flash_attention_with_lse(
+    q, k, v, spec: MaskSpec = MaskSpec(causal=True), *, scale=None,
+    block_q: int = 512, block_kv: int = 512, mode: str = "auto",
+):
+    """Forward-only (serving / context-parallel): returns (o, lse)."""
+    cfg = FlashConfig(spec=spec, block_q=block_q, block_kv=block_kv, mode=mode, scale=scale)
+    return _fwd(q, k, v, cfg)

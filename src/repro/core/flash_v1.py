@@ -1,0 +1,78 @@
+"""FlashAttention-1-style forward loop -- the paper's baseline for C1.
+
+Differences from ``core.flash`` (deliberate, per FA1 [Dao et al. 2022]):
+
+  * the output accumulator is **rescaled to a normalized state on every KV
+    block** (two extra O(Br x d) divides/multiplies per block: `diag(l)^-1`
+    re-applied), instead of FA2's single end-of-loop rescale;
+  * both row-max ``m`` and row-sum ``l`` are kept as residuals (FA2 keeps
+    only ``L = m + log l``).
+
+Numerically both are exact; the difference is pure non-matmul FLOPs, which
+is precisely the paper's point (Section 3.1). ``benchmarks/nonmatmul_census``
+counts the exp/div/mul ops in the lowered HLO of the two and times them.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masks import DEFAULT_MASK_VALUE, MaskSpec, make_tile_mask
+
+
+def flash_v1_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    spec: MaskSpec = MaskSpec(causal=True),
+    *,
+    scale: Optional[float] = None,
+    block_kv: int = 512,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (o, m, l) -- FA1 keeps both softmax statistics."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hk, _ = k.shape
+    G = Hq // Hk
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    bk = min(block_kv, Sk)
+    assert Sk % bk == 0, "flash_v1 baseline: Sk must divide block_kv"
+    t_kv = Sk // bk
+
+    qt = q.reshape(B, Sq, Hk, G, D).transpose(0, 2, 3, 1, 4).reshape(B * Hk, G, Sq, D)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * Hk, t_kv, bk, D).transpose(1, 0, 2, 3)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * Hk, t_kv, bk, D).transpose(1, 0, 2, 3)
+    q_ids = jnp.arange(Sq, dtype=jnp.int32) + spec.q_offset
+
+    def body(carry, xs):
+        m, l, o = carry  # o is *normalized* at every step: the FA1 invariant
+        k_j, v_j, j = xs
+        s = jnp.einsum("ngqd,nkd->ngqk", qt, k_j, preferred_element_type=jnp.float32) * scale
+        kv_ids = j * bk + jnp.arange(bk, dtype=jnp.int32)
+        mask = make_tile_mask(spec, q_ids, kv_ids)
+        if mask is not None:
+            s = jnp.where(mask, s, DEFAULT_MASK_VALUE)
+        m_tile = jnp.max(s, axis=-1)
+        p = jnp.exp(s - m_tile[..., None])
+        l_tile = jnp.sum(p, axis=-1)
+        m_new = jnp.maximum(m, m_tile)
+        alpha = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_new))
+        beta = jnp.exp(m_tile - m_new)
+        l_new = alpha * l + beta * l_tile
+        pv = jnp.einsum("ngqk,nkd->ngqd", p.astype(v.dtype), v_j, preferred_element_type=jnp.float32)
+        # FA1: renormalize the running output every block ->
+        #   o <- diag(l_new)^-1 (diag(l) alpha o + beta P V)
+        l_safe = jnp.where(l_new == 0.0, 1.0, l_new)
+        o_new = (l[..., None] * alpha[..., None] * o + beta[..., None] * pv) / l_safe[..., None]
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B * Hk, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B * Hk, G, Sq), jnp.float32)
+    o0 = jnp.zeros((B * Hk, G, Sq, D), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), (kt, vt, jnp.arange(t_kv, dtype=jnp.int32)))
+    o = o.reshape(B, Hk, G, Sq, D).transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D)
+    return o.astype(q.dtype), m.reshape(B, Hq, Sq), l.reshape(B, Hq, Sq)

@@ -1,0 +1,150 @@
+"""Attention mask specifications and block-level mask construction.
+
+FlashAttention-2 works block-by-block; masks are therefore described
+*symbolically* (causal flag, window size, query offset) so that:
+
+  * the XLA implementation can build a mask for a (q_block, kv_block) tile
+    from iotas (never materializing an N x N mask), and
+  * the Pallas kernels can decide statically/per-block whether a tile is
+    fully visible (no mask applied), partially visible (apply mask), or
+    fully hidden (skip compute) -- the paper's causal block-skipping, Sec 3.1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+# Large-but-finite mask value used inside kernels: subtracting true -inf can
+# produce NaN via (-inf) - (-inf) in the m-update when an entire row is
+# masked. DEFAULT_MASK_VALUE matches common flash implementations.
+DEFAULT_MASK_VALUE = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskSpec:
+    """Symbolic attention mask.
+
+    Attributes:
+      causal: apply a causal (lower triangular) mask.
+      window: if set, sliding-window attention -- query i sees keys in
+        (i - window, i]. Implies causal when ``causal`` is True (the usual
+        SWA-in-decoder case, e.g. Mixtral); a non-causal window masks
+        |i - j| >= window.
+      q_offset: absolute position of the first query row relative to the
+        first key row. Used for decode (single query at position `cache_len`)
+        and for chunked prefill.
+      sink: number of always-visible prefix keys (attention sinks / Hymba
+        meta tokens): key j < sink is visible to every query regardless of
+        causal/window constraints (but never *beyond* causality -- sinks sit
+        at the sequence start, so causality already admits them; the flag
+        matters only to *window* masking).
+    """
+
+    causal: bool = False
+    window: Optional[int] = None
+    q_offset: int = 0
+    sink: int = 0
+
+    @property
+    def is_trivial(self) -> bool:
+        return not self.causal and self.window is None
+
+    def with_offset(self, q_offset: int) -> "MaskSpec":
+        return dataclasses.replace(self, q_offset=q_offset)
+
+
+FULL = MaskSpec(causal=False)
+CAUSAL = MaskSpec(causal=True)
+
+
+def make_tile_mask(
+    spec: MaskSpec,
+    q_ids: jnp.ndarray,
+    kv_ids: jnp.ndarray,
+) -> Optional[jnp.ndarray]:
+    """Boolean visibility mask for a tile given absolute row/col ids.
+
+    Args:
+      spec: the mask spec.
+      q_ids: (Bq,) int32 absolute query positions (spec.q_offset already NOT
+        applied -- pass absolute ids).
+      kv_ids: (Bc,) int32 absolute key positions.
+
+    Returns:
+      (Bq, Bc) bool array (True = visible), or None if the tile is fully
+      visible (saves the select).
+    """
+    if spec.is_trivial:
+        return None
+    qi = q_ids[:, None]
+    kj = kv_ids[None, :]
+    mask = None
+
+    def _and(a, b):
+        return b if a is None else (a & b)
+
+    if spec.causal:
+        mask = _and(mask, qi >= kj)
+        if spec.window is not None:
+            in_win = (qi - kj) < spec.window
+            if spec.sink:
+                in_win = in_win | (kj < spec.sink)
+            mask = _and(mask, in_win)
+    elif spec.window is not None:
+        in_win = jnp.abs(qi - kj) < spec.window
+        if spec.sink:
+            in_win = in_win | (kj < spec.sink)
+        mask = _and(mask, in_win)
+    return mask
+
+
+def tile_visibility(spec: MaskSpec, q_lo: int, q_hi: int, kv_lo: int, kv_hi: int) -> str:
+    """Static classification of a tile: 'full' | 'partial' | 'empty'.
+
+    Positions are absolute and half-open: queries in [q_lo, q_hi), keys in
+    [kv_lo, kv_hi). This is the block-skipping logic of FA2 Section 3.1:
+    'empty' tiles are skipped entirely, 'full' tiles skip the mask apply.
+    """
+    if spec.is_trivial:
+        return "full"
+    has_sink = spec.sink > 0 and kv_lo < spec.sink
+    if spec.causal:
+        # Fully hidden iff even the last query row sees none of the block:
+        if q_hi - 1 < kv_lo:
+            return "empty"
+        if (
+            spec.window is not None
+            and (q_lo - (kv_hi - 1)) >= spec.window
+            and not has_sink
+        ):
+            return "empty"
+        # Fully visible iff first row sees the whole block:
+        lo_vis = q_lo >= kv_hi - 1
+        if spec.window is not None and not (spec.sink >= kv_hi):
+            lo_vis = lo_vis and ((q_hi - 1) - kv_lo) < spec.window
+        return "full" if lo_vis else "partial"
+    # non-causal window
+    assert spec.window is not None
+    if (
+        (q_lo - (kv_hi - 1)) >= spec.window or (kv_lo - (q_hi - 1)) >= spec.window
+    ) and not has_sink:
+        return "empty"
+    if spec.sink >= kv_hi:
+        return "full"
+    full = (
+        abs(q_lo - (kv_hi - 1)) < spec.window
+        and abs((q_hi - 1) - kv_lo) < spec.window
+        and abs(q_lo - kv_lo) < spec.window
+        and abs((q_hi - 1) - (kv_hi - 1)) < spec.window
+    )
+    return "full" if full else "partial"
+
+
+def apply_mask(scores: jnp.ndarray, mask: Optional[jnp.ndarray], value: float = DEFAULT_MASK_VALUE) -> jnp.ndarray:
+    if mask is None:
+        return scores
+    return jnp.where(mask, scores, value)

@@ -1,0 +1,85 @@
+"""Online-softmax algebra (Milakov & Gimelshein 2018; FA2 Section 3.1).
+
+The core state for a row block is a triple ``(m, l, o_unscaled)``:
+
+  m           running row max of scores seen so far                (fp32)
+  l           running row sum of exp(scores - m)                   (fp32)
+  o_unscaled  sum_j exp(S_j - m) @ V_j  -- NOT divided by l        (fp32)
+
+FlashAttention-2's tweak C1: keep ``o_unscaled`` through the loop and divide
+by ``l`` exactly once at the end (one non-matmul rescale instead of one per
+block), and persist only the logsumexp ``L = m + log l`` for the backward
+pass. The ``combine`` below is associative and commutative, which is what
+makes both the kernel-level KV-loop *and* the split-KV decode tree *and* the
+mesh-level context-parallel reduction correct. ``tests/test_properties.py``
+checks associativity with hypothesis.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class SoftmaxState(NamedTuple):
+    m: jnp.ndarray  # (..., rows)
+    l: jnp.ndarray  # (..., rows)
+    o: jnp.ndarray  # (..., rows, d) -- unscaled
+
+
+def init_state(rows_shape, d, dtype=jnp.float32) -> SoftmaxState:
+    return SoftmaxState(
+        m=jnp.full(rows_shape, -jnp.inf, dtype=dtype),
+        l=jnp.zeros(rows_shape, dtype=dtype),
+        o=jnp.zeros((*rows_shape, d), dtype=dtype),
+    )
+
+
+def block_state(s: jnp.ndarray, v: jnp.ndarray) -> SoftmaxState:
+    """State for a single block of scores s (..., rows, cols) against v."""
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("...rc,...cd->...rd", p, v)
+    return SoftmaxState(m=m, l=l, o=o)
+
+
+def combine(a: SoftmaxState, b: SoftmaxState) -> SoftmaxState:
+    """Merge two online-softmax states (associative)."""
+    m = jnp.maximum(a.m, b.m)
+    # exp(-inf - -inf) guard: where both are -inf the alphas are 0 via where.
+    alpha_a = jnp.where(jnp.isneginf(a.m), 0.0, jnp.exp(a.m - m))
+    alpha_b = jnp.where(jnp.isneginf(b.m), 0.0, jnp.exp(b.m - m))
+    l = a.l * alpha_a + b.l * alpha_b
+    o = a.o * alpha_a[..., None] + b.o * alpha_b[..., None]
+    return SoftmaxState(m=m, l=l, o=o)
+
+
+def finalize(s: SoftmaxState):
+    """-> (o, lse): the softmax-weighted output and the row logsumexp."""
+    l_safe = jnp.where(s.l == 0.0, 1.0, s.l)
+    o = s.o / l_safe[..., None]
+    lse = s.m + jnp.log(l_safe)
+    lse = jnp.where(s.l == 0.0, -jnp.inf, lse)
+    return o, lse
+
+
+def combine_lse_outputs(o_parts: jnp.ndarray, lse_parts: jnp.ndarray):
+    """Combine per-part *finalized* outputs using their LSEs.
+
+    Used by split-KV decode and context-parallel attention where each worker
+    produces a locally-normalized (o_i, lse_i). Stacked along axis 0:
+      o_parts:   (P, ..., rows, d)
+      lse_parts: (P, ..., rows)
+    Returns (o, lse) equivalent to attention over the concatenated KV.
+    """
+    m = jnp.max(lse_parts, axis=0)
+    m_safe = jnp.where(jnp.isneginf(m), 0.0, m)
+    w = jnp.exp(lse_parts - m_safe)  # (P, ..., rows); exp(-inf)=0 handles empties
+    w = jnp.where(jnp.isneginf(lse_parts), 0.0, w)
+    l = jnp.sum(w, axis=0)
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o = jnp.sum(o_parts * w[..., None], axis=0) / l_safe[..., None]
+    lse = m + jnp.log(l_safe)
+    return o, lse

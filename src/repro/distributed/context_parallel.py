@@ -1,0 +1,35 @@
+"""Context-parallel attention: FA2's sequence-dimension parallelism (C2)
+lifted from thread blocks to the device mesh.
+
+Strategy (DESIGN.md Section 3, 'sequence' attn_sharding): Q stays sharded
+over the sequence axis ('seq' -> 'model'); K/V are all-gathered over the
+model axis ONCE per layer and the flash scan runs each chip's Q rows
+against the full KV. Under GQA the gathered KV is small
+(kv_heads * head_dim << q rows), which is what makes this profitable for
+archs whose head counts cannot shard 16-way (whisper 8H, gemma3 4H,
+hymba 25H, deepseek 56H).
+
+The gather is expressed as a sharding *constraint* (seq axis -> None), so
+XLA SPMD inserts exactly one all-gather per layer and keeps everything else
+sharded. The flash implementation must then never dynamic-index a
+seq-sharded axis: dense mode keeps Q whole in the forward, and the dense
+backward (core.flash._bwd_dense_unblocked) scans KV blocks with dQ carried
+whole -- measured in EXPERIMENTS.md Section Perf (deepseek train_4k), the
+blocked alternative forced a 470 MB fp32 all-gather of q_blocks per tile
+step.
+"""
+
+from __future__ import annotations
+
+from repro.distributed.sharding import constrain
+
+
+def gather_kv(k, v):
+    """Constrain K/V (B, S, Hkv, D) to be replicated along the sequence axis.
+
+    Inside a sharding-rules context with 'kv_seq' -> 'model' this makes XLA
+    insert one all-gather; outside any context it is a no-op.
+    """
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    return k, v

@@ -1,0 +1,137 @@
+"""Parameter / cache PartitionSpec assignment by param-tree path.
+
+Walks a params (or cache) pytree and assigns a PartitionSpec per leaf by
+matching the leaf's path suffix against the table below, then left-pads the
+spec with None for stacked (scan-over-layers) leading dims. Used for jit
+in_shardings in dryrun/train/serve and by the checkpoint elastic restore.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import ShardingRules
+
+# leaf-name -> logical axes of the *unstacked* param
+_TABLE = {
+    # embeddings (FSDP'd over data only: p_vocab already uses `model`)
+    "tokens": ("p_vocab", "p_embed_tbl"),
+    "unembed": ("p_embed_tbl", "p_vocab"),
+    "positions": (None, None),
+    "meta": (None, None),
+    # norms
+    "scale": (None,),
+    "bias": (None,),
+    "q_norm": (None,),
+    "k_norm": (None,),
+    "attn_out_norm": (None,),
+    "ssm_out_norm": (None,),
+    # attention
+    "wq": ("p_embed", "p_heads"),
+    "wk": ("p_embed", "p_kv_heads"),
+    "wv": ("p_embed", "p_kv_heads"),
+    "wo": ("p_heads", "p_embed"),
+    "bq": ("p_heads",),
+    "bk": ("p_kv_heads",),
+    "bv": ("p_kv_heads",),
+    "bo": (None,),
+    # dense mlp
+    "w_gate": ("p_embed", "p_ff"),
+    "w_up": ("p_embed", "p_ff"),
+    "w_down": ("p_ff", "p_embed"),
+    "w_in": ("p_embed", "p_ff"),
+    "b_in": ("p_ff",),
+    "w_out": ("p_ff", "p_embed"),
+    "b_out": (None,),
+    # moe (3D expert-stacked; distinguished by ndim below)
+    "router": (None, None),
+    # mamba
+    "in_proj": ("p_embed", "p_inner"),
+    "conv_w": (None, "p_inner"),
+    "conv_b": ("p_inner",),
+    "x_proj": ("p_inner", None),
+    "dt_w": (None, "p_inner"),
+    "dt_bias": ("p_inner",),
+    "A_log": ("p_inner", None),
+    "D": ("p_inner",),
+    "out_proj": ("p_inner", "p_embed"),
+    # decode caches
+    "k": ("batch", "cache_seq", "kv_heads", None),
+    "v": ("batch", "cache_seq", "kv_heads", None),
+    "h": ("batch", "inner", None),
+    "conv": ("batch", None, "inner"),
+}
+
+_MOE_TABLE = {
+    "we_gate": ("p_experts", "p_embed", "p_moe_ff"),
+    "we_up": ("p_experts", "p_embed", "p_moe_ff"),
+    "we_down": ("p_experts", "p_moe_ff", "p_embed"),
+}
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return str(p.key)
+    return ""
+
+
+def spec_for_leaf(name: str, ndim: int, rules: ShardingRules) -> P:
+    logical: Optional[tuple] = None
+    if name in _MOE_TABLE:
+        logical = _MOE_TABLE[name]
+    elif name in _TABLE:
+        logical = _TABLE[name]
+    if logical is None:
+        return P()  # unknown leaf: replicate
+    spec = rules.spec(*logical)
+    pad = ndim - len(logical)
+    if pad < 0:
+        return P()
+    return P(*([None] * pad + list(spec)))
+
+
+def tree_specs(tree, rules: ShardingRules):
+    """PartitionSpec pytree matching ``tree``."""
+
+    def one(path, leaf):
+        nd = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+        return spec_for_leaf(_leaf_name(path), nd, rules)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def tree_shardings(tree, mesh: Mesh, rules: ShardingRules):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), tree_specs(tree, rules)
+    )
+
+
+def batch_specs(batch_tree, rules: ShardingRules):
+    """Shardings for a train/prefill batch: token arrays on ('batch',),
+    frame/patch embeddings on ('batch','seq',None)."""
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        nd = leaf.ndim
+        if name in ("inputs", "targets"):
+            return rules.spec("batch", None)
+        if name in ("frames", "patches"):
+            return rules.spec("batch", "seq", None)
+        if name == "token":
+            return rules.spec("batch", None)
+        if name == "cache_len":
+            return rules.spec("batch")
+        if name in _TABLE and nd == len(_TABLE[name]):
+            return rules.spec(*_TABLE[name])
+        # stacked cache leaves (leading layer dims)
+        if name in _TABLE:
+            base = _TABLE[name]
+            return P(*([None] * (nd - len(base)) + list(rules.spec(*base))))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)

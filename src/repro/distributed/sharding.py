@@ -1,0 +1,143 @@
+"""Logical-axis sharding: rules, contexts, and constraint helpers.
+
+Model code never names mesh axes. It annotates activations/params with
+*logical* axes ('batch', 'seq', 'heads', 'embed', 'ff', 'vocab', 'experts',
+'kv_seq', 'inner', ...); a ``ShardingRules`` table maps logical axes to mesh
+axes. ``use_rules(mesh, rules)`` installs a context; outside a context every
+constraint is a no-op, so models run unmodified on CPU tests.
+
+Two attention strategies (DESIGN.md Section 3):
+  'heads'    : 'heads' -> 'model'; 'seq' unsharded.
+  'sequence' : context parallelism -- 'seq' -> 'model' (FA2's C2 lifted to
+               the mesh); 'heads' unsharded.
+FSDP: parameter 'embed'/'ff' input dims additionally sharded over 'data'
+(all-gathered per scan step by XLA SPMD).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+class ShardingRules:
+    """logical axis name -> mesh axis (str | tuple | None)."""
+
+    def __init__(self, table: Dict[str, object]):
+        self.table = dict(table)
+
+    def spec(self, *names: Optional[str]) -> P:
+        return P(*[self.table.get(n) if n else None for n in names])
+
+
+def lm_rules(
+    cfg=None,
+    *,
+    attn_sharding: str = "heads",
+    fsdp: bool = True,
+    pods: bool = False,
+    model_axis: int = 16,
+    decode: bool = False,
+    batch_size: int = 0,
+) -> ShardingRules:
+    """Build the rule table for one arch on the (pod?, data, model) mesh.
+
+    Divisibility-aware: kv heads / experts that don't divide the model axis
+    fall back to replication (kv) or per-expert-FFN sharding (MoE); archs
+    whose q heads don't divide use attn_sharding='sequence' (context
+    parallelism). batch=1 decode (long_500k) leaves `data` to the KV-seq
+    split instead of the batch.
+    """
+    if cfg is not None:
+        attn_sharding = cfg.attn_sharding
+        kv_ok = cfg.num_kv_heads % model_axis == 0
+        heads_ok = cfg.num_heads % model_axis == 0
+        experts_ok = bool(cfg.moe) and cfg.moe.num_experts % model_axis == 0
+        has_ssm = cfg.ssm is not None
+        # FSDP over data*model on the embed dim needs d_model divisible by
+        # the full product (gemma3: 1152 % 256 != 0 -> fall back to data).
+        embed_2d_ok = cfg.d_model % (model_axis * 16) == 0
+    else:
+        kv_ok = heads_ok = True
+        experts_ok = True
+        has_ssm = False
+        embed_2d_ok = True
+    seqsh = attn_sharding == "sequence"
+    heads_ax = None if seqsh or not heads_ok else "model"
+    kv_ax = None if seqsh or not kv_ok else "model"
+    batch = (("pod", "data") if pods else ("data",))
+    batch_ok = batch_size == 0 or batch_size % (2 * 16 if pods else 16) == 0
+    if not batch_ok:  # batch=1 long-context decode
+        batch = ("pod",) if pods and batch_size % 2 == 0 else None
+    # decode caches are always sequence-split (split-KV / context-parallel
+    # decode -- C2); with an unshardable batch we split over data too.
+    cache_ax = ("data", "model") if not batch_ok else "model"
+    t = {
+        # activations
+        "batch": batch,
+        "seq": "model" if seqsh else None,
+        "kv_seq": "model" if seqsh else None,
+        "heads": heads_ax,
+        "kv_heads": kv_ax,
+        "embed": None,
+        "ff_act": None if seqsh else "model",
+        "vocab": "model",
+        "experts": "model" if experts_ok else None,
+        "moe_ff": None if experts_ok else "model",
+        "inner": "model",
+        "ssm_seq": None,
+        "cache_seq": cache_ax if decode else ("model" if seqsh else None),
+        # params
+        "p_embed": (
+            ("data", "model") if (fsdp and seqsh and not has_ssm and embed_2d_ok)
+            else ("data" if fsdp else None)
+        ),
+        "p_embed_tbl": "data" if fsdp else None,
+        "p_ff": None if seqsh else "model",
+        "p_heads": heads_ax,
+        "p_kv_heads": kv_ax,
+        "p_vocab": "model",
+        "p_experts": "model" if experts_ok else None,
+        "p_moe_ff": None if experts_ok else "model",
+        "p_inner": "model",
+        "layers": None,
+    }
+    return ShardingRules(t)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: ShardingRules):
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def current() -> Optional[Tuple[Mesh, ShardingRules]]:
+    return getattr(_ctx, "state", None)
+
+
+def constrain(x, *names: Optional[str]):
+    """with_sharding_constraint on logical axes; no-op outside a context."""
+    state = current()
+    if state is None:
+        return x
+    mesh, rules = state
+    spec = rules.spec(*names)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(*names: Optional[str]) -> Optional[NamedSharding]:
+    state = current()
+    if state is None:
+        return None
+    mesh, rules = state
+    return NamedSharding(mesh, rules.spec(*names))

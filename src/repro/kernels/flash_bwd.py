@@ -1,0 +1,231 @@
+"""FlashAttention-2 backward Pallas TPU kernels (the paper's Algorithm 2).
+
+GPU->TPU adaptation (DESIGN.md Section 2): the paper parallelizes the
+backward over *column* (KV) blocks, with thread blocks doing **atomic adds**
+into dQ. TPUs have no HBM atomics, so we split into two kernels -- the
+standard TPU flash scheme:
+
+  * ``dkv`` kernel -- grid (B*Hkv, Tkv, G, Tq): each (bh, j) owns one KV
+    block (the paper's column-block worker, Fig. 2 right); the inner
+    sequential (g, i) axes stream Q/dO blocks past it, accumulating dK_j,
+    dV_j in VMEM scratch (Algorithm 2 lines 12, 16) -- and summing over the
+    GQA group g, the paper's "sum dK/dV across duplicated heads".
+  * ``dq`` kernel -- grid (B*Hq, Tq, Tkv): each (bh, i) owns one Q block;
+    the inner KV loop accumulates dQ_i in scratch (line 15). This replaces
+    the atomic-add cross-worker communication with a second pass that
+    recomputes S -- extra *matmul* FLOPs in exchange for zero communication,
+    which is the paper's own trade (matmul FLOPs are ~16x cheaper).
+
+Both kernels recompute P = exp(S - L) from the logsumexp only (C1b, line 11).
+D = rowsum(dO o O) (line 4) is precomputed in ops.py (one fused elementwise
+pass). Layouts as in flash_fwd.py; lse/delta are (BH, Sq, LANES)-broadcast.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.masks import DEFAULT_MASK_VALUE, MaskSpec
+from repro.kernels.flash_fwd import LANES, _tile_mask, _visibility
+
+
+def _recompute_p(q, k, lse, spec, i, j, bq, bk, kv_valid):
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    _, needs_mask = _visibility(spec, i, j, bq, bk, kv_valid)
+    mask = _tile_mask(spec, i, j, bq, bk, kv_valid)
+    s = jnp.where(jnp.logical_or(~needs_mask, mask), s, DEFAULT_MASK_VALUE)
+    return jnp.exp(s - lse), s
+
+
+# ---------------------------------------------------------------------------
+# dK / dV kernel
+# ---------------------------------------------------------------------------
+
+
+def _dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+    dk_ref, dv_ref,
+    dk_scr, dv_scr,
+    *, spec: MaskSpec, bq: int, bk: int, t_q: int, group: int, kv_valid: int,
+):
+    j = pl.program_id(1)
+    g = pl.program_id(2)
+    i = pl.program_id(3)
+
+    @pl.when(jnp.logical_and(g == 0, i == 0))
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    empty, _ = _visibility(spec, i, j, bq, bk, kv_valid)
+
+    @pl.when(~empty)
+    def _compute():
+        q = q_ref[0]      # (bq, d), pre-scaled
+        k = k_ref[0]      # (bk, d)
+        v = v_ref[0]
+        do = do_ref[0]    # (bq, d)
+        lse = lse_ref[0][:, :1]    # (bq, 1)
+        delta = delta_ref[0][:, :1]
+        p, _ = _recompute_p(q, k, lse, spec, i, j, bq, bk, kv_valid)  # line 11
+        # dV_j += P^T dO_i                                          (line 12)
+        dv_scr[...] += jax.lax.dot_general(
+            p.astype(do.dtype), do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        # dP = dO_i V_j^T                                           (line 13)
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        # dS = P o (dP - D_i)                                       (line 14)
+        ds = p * (dp - delta)
+        # dK_j += dS^T Q_i  (q pre-scaled => scale already folded)  (line 16)
+        dk_scr[...] += jax.lax.dot_general(
+            ds.astype(q.dtype), q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(jnp.logical_and(g == group - 1, i == t_q - 1))
+    def _emit():
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_bwd_dkv(
+    q, k, v, do, lse, delta, spec: MaskSpec, *,
+    group: int, block_q: int, block_kv: int, kv_valid: int, interpret: bool = True,
+):
+    """Returns (dk, dv) in (BHk, Skp, D) fp32. q pre-scaled by 1/sqrt(d)."""
+    BH, Sq, D = q.shape
+    BHk, Skp, _ = k.shape
+    t_q, t_kv = Sq // block_q, Skp // block_kv
+    grid = (BHk, t_kv, group, t_q)
+    kernel = functools.partial(
+        _dkv_kernel, spec=spec, bq=block_q, bk=block_kv, t_q=t_q, group=group,
+        kv_valid=kv_valid,
+    )
+    from repro.core.flash import _visible_pairs
+
+    n_vis = len(_visible_pairs(spec, t_q, t_kv, block_q, block_kv)[0])
+    cost = pl.CostEstimate(
+        flops=BH * n_vis * 2 * block_q * block_kv * D * 3,  # 3 matmuls here
+        bytes_accessed=2 * k.size * k.dtype.itemsize
+        + BHk * t_kv * group * t_q * 2 * block_q * D * q.dtype.itemsize,
+        transcendentals=BH * n_vis * block_q * block_kv,
+    )
+    qspec = pl.BlockSpec(
+        (1, block_q, D), lambda bh, j, g, i, grp=group: (bh * grp + g, i, 0)
+    )
+    lspec = pl.BlockSpec(
+        (1, block_q, LANES), lambda bh, j, g, i, grp=group: (bh * grp + g, i, 0)
+    )
+    kvspec = pl.BlockSpec((1, block_kv, D), lambda bh, j, g, i: (bh, j, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[qspec, kvspec, kvspec, qspec, lspec, lspec],
+        out_specs=[kvspec, kvspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((BHk, Skp, D), jnp.float32),
+            jax.ShapeDtypeStruct((BHk, Skp, D), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_kv, D), jnp.float32),
+            pltpu.VMEM((block_kv, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary", "arbitrary"),
+        ),
+        cost_estimate=cost,
+        interpret=interpret,
+        name="fa2_bwd_dkv",
+    )(q, k, v, do, lse, delta)
+
+
+# ---------------------------------------------------------------------------
+# dQ kernel
+# ---------------------------------------------------------------------------
+
+
+def _dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+    dq_ref,
+    dq_scr,
+    *, spec: MaskSpec, bq: int, bk: int, t_kv: int, kv_valid: int,
+):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    empty, _ = _visibility(spec, i, j, bq, bk, kv_valid)
+
+    @pl.when(~empty)
+    def _compute():
+        q = q_ref[0]
+        k = k_ref[0]
+        v = v_ref[0]
+        do = do_ref[0]
+        lse = lse_ref[0][:, :1]
+        delta = delta_ref[0][:, :1]
+        p, _ = _recompute_p(q, k, lse, spec, i, j, bq, bk, kv_valid)
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        ds = p * (dp - delta)
+        # dQ_i += dS K_j                                            (line 15)
+        dq_scr[...] += jax.lax.dot_general(
+            ds.astype(k.dtype), k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(j == t_kv - 1)
+    def _emit():
+        dq_ref[0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def flash_bwd_dq(
+    q, k, v, do, lse, delta, spec: MaskSpec, *,
+    group: int, block_q: int, block_kv: int, kv_valid: int, interpret: bool = True,
+):
+    """Returns dq in (BH, Sq, D) fp32 (gradient w.r.t. *scaled* q)."""
+    BH, Sq, D = q.shape
+    BHk, Skp, _ = k.shape
+    t_q, t_kv = Sq // block_q, Skp // block_kv
+    grid = (BH, t_q, t_kv)
+    kernel = functools.partial(
+        _dq_kernel, spec=spec, bq=block_q, bk=block_kv, t_kv=t_kv, kv_valid=kv_valid
+    )
+    from repro.core.flash import _visible_pairs
+
+    n_vis = len(_visible_pairs(spec, t_q, t_kv, block_q, block_kv)[0])
+    cost = pl.CostEstimate(
+        flops=BH * n_vis * 2 * block_q * block_kv * D * 3,
+        bytes_accessed=2 * q.size * q.dtype.itemsize
+        + BH * n_vis * 2 * block_kv * D * k.dtype.itemsize,
+        transcendentals=BH * n_vis * block_q * block_kv,
+    )
+    qspec = pl.BlockSpec((1, block_q, D), lambda bh, i, j: (bh, i, 0))
+    lspec = pl.BlockSpec((1, block_q, LANES), lambda bh, i, j: (bh, i, 0))
+    kvspec = pl.BlockSpec((1, block_kv, D), lambda bh, i, j, g=group: (bh // g, j, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[qspec, kvspec, kvspec, qspec, lspec, lspec],
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        cost_estimate=cost,
+        interpret=interpret,
+        name="fa2_bwd_dq",
+    )(q, k, v, do, lse, delta)

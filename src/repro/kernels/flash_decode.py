@@ -1,0 +1,114 @@
+"""Split-KV flash decode Pallas TPU kernel (C2 applied to inference).
+
+One query token per sequence: the (batch x kv-heads) grid alone cannot fill
+a TPU pod, so -- exactly as the paper parallelizes the forward over the
+sequence axis -- we add a ``num_splits`` grid axis over the KV cache. Each
+grid step computes a locally-normalized partial (o_c, lse_c) for its chunk;
+the (cheap, O(splits)) merge runs in XLA via the associative online-softmax
+combine. All G queries of a GQA group are processed against their shared KV
+head in one step (the paper's MQA/GQA indexing note).
+
+Layouts (ops.py): q (B*Hkv, G, D) pre-scaled; kv (B*Hkv, S, D);
+lengths (B*Hkv,) int32 in SMEM. Outputs o_parts (B*Hkv, ns, G, D) fp32 and
+lse_parts (B*Hkv, ns, G, LANES) fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.masks import DEFAULT_MASK_VALUE
+
+LANES = 128
+
+
+def _decode_kernel(
+    len_ref,  # SMEM (B*Hkv,)
+    q_ref, k_ref, v_ref,
+    o_ref, lse_ref,
+    *, chunk: int, window: Optional[int], sink: int,
+):
+    bh = pl.program_id(0)
+    c = pl.program_id(1)
+    L = len_ref[bh]
+
+    q = q_ref[0]  # (G, D)
+    k = k_ref[0]  # (chunk, D)
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + c * chunk
+    valid = cols < L
+    if window is not None:
+        in_win = cols >= L - window
+        if sink:
+            in_win = in_win | (cols < sink)
+        valid = valid & in_win
+    s = jnp.where(valid, s, DEFAULT_MASK_VALUE)
+
+    m = jnp.max(s, axis=-1, keepdims=True)  # (G, 1)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    any_valid = jnp.any(valid, axis=-1, keepdims=True)
+    l = jnp.where(any_valid, l, 0.0)
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) / l_safe
+    lse = jnp.where(l == 0.0, -jnp.inf, m + jnp.log(l_safe))
+    o_ref[0, 0] = jnp.where(any_valid, o, 0.0)
+    lse_ref[0, 0] = jnp.broadcast_to(lse, lse_ref.shape[2:])
+
+
+def flash_decode_kernel(
+    q: jnp.ndarray,  # (BHk, G, D) pre-scaled
+    k: jnp.ndarray,  # (BHk, S, D)
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,  # (BHk,) int32
+    *,
+    num_splits: int = 8,
+    window: Optional[int] = None,
+    sink: int = 0,
+    interpret: bool = True,
+):
+    BHk, G, D = q.shape
+    _, S, _ = k.shape
+    ns = num_splits
+    while S % ns != 0:
+        ns -= 1
+    chunk = S // ns
+    kernel = functools.partial(_decode_kernel, chunk=chunk, window=window, sink=sink)
+    cost = pl.CostEstimate(
+        flops=2 * BHk * G * S * D * 2,
+        bytes_accessed=2 * k.size * k.dtype.itemsize + 2 * q.size * q.dtype.itemsize,
+        transcendentals=BHk * G * S,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BHk, ns),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, D), lambda bh, c: (bh, 0, 0)),
+            pl.BlockSpec((1, chunk, D), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, D), lambda bh, c: (bh, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda bh, c: (bh, c, 0, 0)),
+            pl.BlockSpec((1, 1, G, LANES), lambda bh, c: (bh, c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BHk, ns, G, D), jnp.float32),
+            jax.ShapeDtypeStruct((BHk, ns, G, LANES), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        cost_estimate=cost,
+        interpret=interpret,
+        name="fa2_decode",
+    )(lengths, q, k, v)

@@ -1,0 +1,221 @@
+"""FlashAttention-2 forward Pallas TPU kernel.
+
+TPU mapping of the paper's scheme (DESIGN.md Section 2):
+
+  * Grid ``(B*Hq, Tq, Tkv)`` -- (batch x heads) plus the paper's C2
+    sequence-dimension axis ``Tq``; both are `parallel`. The KV axis ``Tkv``
+    is `arbitrary` (sequential on TPU), which makes the VMEM scratch carry
+    the online-softmax state across KV steps.
+  * "Split-Q" warp partitioning (C3) becomes q-block-stationary scheduling:
+    the Q tile is fetched once per (bh, i) and stays in VMEM while K/V
+    stream past; the accumulator never leaves VMEM scratch. There is no
+    cross-"worker" communication, exactly as in the paper's Figure 3 right.
+  * C1: the accumulator is un-rescaled until the final KV step, where we
+    apply ``diag(l)^-1`` once and emit the logsumexp.
+  * Causal/window block skipping: fully-masked tiles skip the MXU work via
+    ``pl.when`` (the TPU grid still visits the step -- the cost is a scalar
+    branch, the matmuls are skipped).
+
+Layout contract (set up by ops.py): q (BH, Sq, D), k/v (BHk, Skv, D) with
+BH = B * Hq, BHk = B * Hkv, q head ``h`` reading kv head ``h // G``.
+All sequence lengths pre-padded to the block size; KV padding masked here.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.masks import DEFAULT_MASK_VALUE, MaskSpec
+
+LANES = 128
+
+
+def _visibility(spec: MaskSpec, i, j, bq: int, bk: int, kv_valid: int):
+    """In-kernel scalar visibility: returns (is_empty, needs_mask) bools.
+
+    i/j are (traced) program ids; spec fields and block sizes are static, so
+    every branch below is a static Python branch over *which* scalar ops to
+    emit -- the emitted ops themselves are traced scalar arithmetic.
+    """
+    q_lo = i * bq + spec.q_offset
+    q_hi = q_lo + bq - 1
+    kv_lo = j * bk
+    kv_hi = kv_lo + bk - 1
+    empty = jnp.bool_(False)
+    full = jnp.bool_(True)
+    if spec.causal:
+        empty = q_hi < kv_lo
+        full = q_lo >= kv_hi
+        if spec.window is not None:
+            win_empty = (q_lo - kv_hi) >= spec.window
+            if spec.sink:
+                win_empty = win_empty & ~(kv_lo < spec.sink)
+            empty = empty | win_empty
+            in_win = (q_hi - kv_lo) < spec.window
+            if spec.sink:
+                in_win = in_win | (kv_hi < spec.sink)
+            full = full & in_win
+    elif spec.window is not None:
+        win_empty = ((q_lo - kv_hi) >= spec.window) | ((kv_lo - q_hi) >= spec.window)
+        if spec.sink:
+            win_empty = win_empty & ~(kv_lo < spec.sink)
+        empty = win_empty
+        full = (abs_diff(q_lo, kv_hi) < spec.window) & (abs_diff(q_hi, kv_lo) < spec.window)
+        if spec.sink:
+            full = full | (kv_hi < spec.sink)
+    if kv_valid % bk != 0:
+        # last block contains padding -> not full there
+        pad_block = kv_valid // bk
+        empty = empty | (kv_lo >= kv_valid)
+        full = full & (j != pad_block)
+    return jnp.bool_(empty), ~jnp.bool_(full)
+
+
+def abs_diff(a, b):
+    d = a - b
+    return jnp.where(d < 0, -d, d)
+
+
+def _tile_mask(spec: MaskSpec, i, j, bq: int, bk: int, kv_valid: int):
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + i * bq + spec.q_offset
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1) + j * bk
+    mask = cols < kv_valid
+    if spec.causal:
+        mask = mask & (rows >= cols)
+        if spec.window is not None:
+            in_win = rows - cols < spec.window
+            if spec.sink:
+                in_win = in_win | (cols < spec.sink)
+            mask = mask & in_win
+    elif spec.window is not None:
+        in_win = abs_diff(rows, cols) < spec.window
+        if spec.sink:
+            in_win = in_win | (cols < spec.sink)
+        mask = mask & in_win
+    return mask
+
+
+def _fwd_kernel(
+    q_ref, k_ref, v_ref,  # inputs (block refs)
+    o_ref, lse_ref,  # outputs
+    m_scr, l_scr, acc_scr,  # VMEM scratch
+    *,
+    spec: MaskSpec,
+    bq: int,
+    bk: int,
+    t_kv: int,
+    kv_valid: int,
+):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    empty, needs_mask = _visibility(spec, i, j, bq, bk, kv_valid)
+
+    @pl.when(~empty)
+    def _compute():
+        q = q_ref[0]  # (bq, d) -- pre-scaled by 1/sqrt(d) in ops.py
+        k = k_ref[0]  # (bk, d)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        mask = _tile_mask(spec, i, j, bq, bk, kv_valid)
+        s = jnp.where(jnp.logical_or(~needs_mask, mask), s, DEFAULT_MASK_VALUE)
+
+        m_prev = m_scr[:, :1]  # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.where(jnp.isneginf(m_prev), 0.0, jnp.exp(m_prev - m_new))
+        p = jnp.exp(s - m_new)
+        l_new = l_scr[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        # C1a: accumulate UN-rescaled; only the running-max correction.
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(j == t_kv - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l_safe).astype(o_ref.dtype)
+        m = m_scr[:, :1]
+        lse = jnp.where(l == 0.0, -jnp.inf, m + jnp.log(l_safe))
+        lse_ref[0] = jnp.broadcast_to(lse, lse_ref.shape[1:])
+
+
+def flash_fwd(
+    q: jnp.ndarray,  # (BH, Sq, D), pre-scaled
+    k: jnp.ndarray,  # (BHk, Skp, D)
+    v: jnp.ndarray,
+    spec: MaskSpec,
+    *,
+    group: int,  # G = Hq // Hkv
+    block_q: int,
+    block_kv: int,
+    kv_valid: int,  # unpadded KV length
+    interpret: bool = True,
+):
+    BH, Sq, D = q.shape
+    BHk, Skp, _ = k.shape
+    assert Sq % block_q == 0 and Skp % block_kv == 0
+    t_q, t_kv = Sq // block_q, Skp // block_kv
+    grid = (BH, t_q, t_kv)
+
+    kernel = functools.partial(
+        _fwd_kernel, spec=spec, bq=block_q, bk=block_kv, t_kv=t_kv, kv_valid=kv_valid
+    )
+    # Roofline-honest cost: count only visible tiles (block skipping).
+    from repro.core.flash import _visible_pairs
+
+    n_vis = len(_visible_pairs(spec, t_q, t_kv, block_q, block_kv)[0])
+    flops_per_tile = 2 * block_q * block_kv * D * 2  # QK^T + PV
+    kv_tile_bytes = 2 * block_kv * D * k.dtype.itemsize  # K + V tiles streamed
+    cost = pl.CostEstimate(
+        flops=BH * n_vis * flops_per_tile,
+        bytes_accessed=2 * q.size * q.dtype.itemsize + BH * n_vis * kv_tile_bytes,
+        transcendentals=BH * n_vis * block_q * block_kv,
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda bh, i, j, g=group: (bh // g, j, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda bh, i, j, g=group: (bh // g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_q, LANES), lambda bh, i, j: (bh, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+            jax.ShapeDtypeStruct((BH, Sq, LANES), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        cost_estimate=cost,
+        interpret=interpret,
+        name="fa2_fwd",
+    )(q, k, v)

@@ -1,0 +1,185 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Handles: layout normalization ((B,S,H,D) -> per-head rows), padding to block
+multiples, q pre-scaling, the fwd<->bwd pairing via ``jax.custom_vjp``
+(Algorithm 1 + Algorithm 2), and the decode split merge. The pure-jnp oracle
+lives in ref.py; parity is enforced by tests/test_flash_kernels.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masks import MaskSpec
+from repro.core.online_softmax import combine_lse_outputs
+from repro.kernels import flash_bwd as _bwd
+from repro.kernels import flash_decode as _dec
+from repro.kernels import flash_fwd as _fwd
+
+LANES = _fwd.LANES
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasFlashConfig:
+    spec: MaskSpec
+    block_q: int = 512
+    block_kv: int = 512
+    scale: Optional[float] = None
+    interpret: bool = True
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _heads_layout(x: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, H, D) -> (B*H, S, D)."""
+    B, S, H, D = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+
+
+def _unheads_layout(x: jnp.ndarray, B: int, H: int) -> jnp.ndarray:
+    BH, S, D = x.shape
+    return x.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+def _prep(q, k, v, cfg: PallasFlashConfig):
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hk, _ = k.shape
+    assert Hq % Hk == 0
+    G = Hq // Hk
+    scale = cfg.scale if cfg.scale is not None else 1.0 / math.sqrt(D)
+    bq = cfg.block_q if Sq >= cfg.block_q else _round_up(Sq, 8)
+    bk = cfg.block_kv if Sk >= cfg.block_kv else _round_up(Sk, 8)
+    qh = _heads_layout(q)
+    kh = _heads_layout(k)
+    vh = _heads_layout(v)
+    pad_q = _round_up(Sq, bq) - Sq
+    pad_k = _round_up(Sk, bk) - Sk
+    if pad_q:
+        qh = jnp.pad(qh, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kh = jnp.pad(kh, ((0, 0), (0, pad_k), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pad_k), (0, 0)))
+    qh = (qh.astype(jnp.float32) * scale).astype(q.dtype)
+    return qh, kh, vh, dict(B=B, Sq=Sq, Sk=Sk, Hq=Hq, Hk=Hk, G=G, D=D, bq=bq, bk=bk, scale=scale)
+
+
+def _fwd_call(q, k, v, cfg: PallasFlashConfig):
+    qh, kh, vh, m = _prep(q, k, v, cfg)
+    o, lse = _fwd.flash_fwd(
+        qh, kh, vh, cfg.spec, group=m["G"], block_q=m["bq"], block_kv=m["bk"],
+        kv_valid=m["Sk"], interpret=cfg.interpret,
+    )
+    o = _unheads_layout(o[:, : m["Sq"]], m["B"], m["Hq"]).astype(q.dtype)
+    lse_rows = lse[:, : m["Sq"], 0].reshape(m["B"], m["Hq"], m["Sq"])
+    return o, lse_rows
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _pallas_flash(q, k, v, cfg: PallasFlashConfig):
+    return _fwd_call(q, k, v, cfg)[0]
+
+
+def _pallas_flash_fwd(q, k, v, cfg):
+    o, lse = _fwd_call(q, k, v, cfg)
+    return o, (q, k, v, o, lse)
+
+
+def _pallas_flash_bwd(cfg: PallasFlashConfig, res, do):
+    q, k, v, o, lse = res
+    qh, kh, vh, m = _prep(q, k, v, cfg)  # qh pre-scaled
+    B, Sq, Hq, Hk, G, D = m["B"], m["Sq"], m["Hq"], m["Hk"], m["G"], m["D"]
+    bq, bk = m["bq"], m["bk"]
+    Sqp = qh.shape[1]
+
+    doh = _heads_layout(do.astype(jnp.float32))
+    oh = _heads_layout(o.astype(jnp.float32))
+    delta = jnp.sum(doh * oh, axis=-1)  # (BH, Sq): Algorithm 2 line 4
+    pad_q = Sqp - Sq
+    if pad_q:
+        doh = jnp.pad(doh, ((0, 0), (0, pad_q), (0, 0)))
+        delta = jnp.pad(delta, ((0, 0), (0, pad_q)))
+    lse_h = lse.reshape(B * Hq, Sq)
+    lse_h = jnp.where(jnp.isneginf(lse_h), 0.0, lse_h)
+    if pad_q:
+        lse_h = jnp.pad(lse_h, ((0, 0), (0, pad_q)))
+    lse_b = jnp.broadcast_to(lse_h[..., None], (*lse_h.shape, LANES))
+    delta_b = jnp.broadcast_to(delta[..., None], (*delta.shape, LANES))
+    doh = doh.astype(q.dtype)
+
+    dk, dv = _bwd.flash_bwd_dkv(
+        qh, kh, vh, doh, lse_b, delta_b, cfg.spec,
+        group=G, block_q=bq, block_kv=bk, kv_valid=m["Sk"], interpret=cfg.interpret,
+    )
+    dq = _bwd.flash_bwd_dq(
+        qh, kh, vh, doh, lse_b, delta_b, cfg.spec,
+        group=G, block_q=bq, block_kv=bk, kv_valid=m["Sk"], interpret=cfg.interpret,
+    )
+    dq = _unheads_layout(dq[:, :Sq], B, Hq) * m["scale"]
+    dk = _unheads_layout(dk[:, : m["Sk"]], B, Hk)
+    dv = _unheads_layout(dv[:, : m["Sk"]], B, Hk)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_pallas_flash.defvjp(_pallas_flash_fwd, _pallas_flash_bwd)
+
+
+def flash_attention_pallas(
+    q, k, v, spec: MaskSpec = MaskSpec(causal=True), *,
+    scale: Optional[float] = None, block_q: int = 512, block_kv: int = 512,
+    interpret: bool = True,
+):
+    """Differentiable FA2 via the Pallas TPU kernels. q (B,Sq,Hq,D)."""
+    cfg = PallasFlashConfig(
+        spec=spec, block_q=block_q, block_kv=block_kv, scale=scale, interpret=interpret
+    )
+    return _pallas_flash(q, k, v, cfg)
+
+
+def flash_attention_pallas_with_lse(
+    q, k, v, spec: MaskSpec = MaskSpec(causal=True), *,
+    scale: Optional[float] = None, block_q: int = 512, block_kv: int = 512,
+    interpret: bool = True,
+):
+    cfg = PallasFlashConfig(
+        spec=spec, block_q=block_q, block_kv=block_kv, scale=scale, interpret=interpret
+    )
+    return _fwd_call(q, k, v, cfg)
+
+
+def flash_decode_pallas(
+    q, k_cache, v_cache, cache_length, *,
+    window: Optional[int] = None, sink: int = 0, scale: Optional[float] = None,
+    num_splits: int = 8, interpret: bool = True,
+):
+    """Split-KV decode via the Pallas kernel. q (B,1,Hq,D); returns (o, lse)."""
+    B, one, Hq, D = q.shape
+    assert one == 1
+    _, S, Hk, _ = k_cache.shape
+    G = Hq // Hk
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    qh = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    qh = qh.reshape(B, Hk, G, D).reshape(B * Hk, G, D)
+    kh = _heads_layout(k_cache)
+    vh = _heads_layout(v_cache)
+    lens = jnp.repeat(cache_length.astype(jnp.int32), Hk)
+    o_parts, lse_parts = _dec.flash_decode_kernel(
+        qh, kh, vh, lens, num_splits=num_splits, window=window, sink=sink,
+        interpret=interpret,
+    )
+    # Merge the splits (associative combine) -- (ns, BHk, G, D) / (ns, BHk, G)
+    o, lse = combine_lse_outputs(
+        jnp.moveaxis(o_parts, 1, 0), jnp.moveaxis(lse_parts[..., 0], 1, 0)
+    )
+    return (
+        o.reshape(B, 1, Hq, D).astype(q.dtype),
+        lse.reshape(B, Hq, 1),
+    )

@@ -1,0 +1,78 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Per-cell HLO byte/FLOP breakdown -- the 'profiler' of the perf loop.
+
+Lowers one (arch x shape) cell exactly like launch.dryrun, then reports the
+trip-aware walker totals split by op kind, the largest collectives, and the
+roofline terms. This is the evidence each EXPERIMENTS.md Section-Perf
+iteration cites.
+
+Usage: python -m repro.launch.analyze_cell --arch qwen3-8b --shape prefill_32k
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+from repro.launch import dryrun  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--block-q", type=int, default=None)
+    ap.add_argument("--block-kv", type=int, default=None)
+    ap.add_argument("--mode", default=None)
+    ap.add_argument("--save", default=None, help="also write the record to this json")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.block_q:
+        overrides["block_q"] = args.block_q
+    if args.block_kv:
+        overrides["block_kv"] = args.block_kv
+    if args.mode:
+        overrides["mode"] = args.mode
+
+    rec = dryrun.lower_cell(
+        args.arch, args.shape, multi_pod=args.multi_pod,
+        attn_overrides=overrides or None,
+    )
+    rl = rec["roofline"]
+    print(f"== {args.arch}::{args.shape} chips={rec['chips']} ==")
+    print(f"mem/dev       {rec['memory']['bytes_per_device']/2**30:.2f} GiB")
+    print(f"flops/chip    {rl['flops']:.3e}   model {rl['model_flops']:.3e} "
+          f"(useful {rl['useful_ratio']:.3f})")
+    print(f"hbm bytes     {rl['hbm_bytes']:.3e}")
+    print(f"coll bytes    {rl['coll_bytes']:.3e}")
+    print(f"t_compute     {rl['t_compute_s']:.3f} s")
+    print(f"t_memory      {rl['t_memory_s']:.3f} s")
+    print(f"t_collective  {rl['t_collective_s']:.3f} s")
+    print(f"dominant      {rl['dominant']}   roofline_fraction {rl['roofline_fraction']:.5f}")
+    fr = rec.get("flash_region") or {}
+    rk = rec.get("roofline_kernel")
+    if rk:
+        print(f"-- kernel-substituted (deployment) roofline --")
+        print(f"flash region  measured_xla={fr['measured_xla_bytes']:.3e}  "
+              f"analytic_kernel={fr['analytic_kernel_bytes']:.3e}")
+        print(f"t_mem {rk['t_memory_s']:.3f}s  dominant {rk['dominant']}  "
+              f"fraction {rk['roofline_fraction']:.5f}")
+    kinds = rec.get("bytes_by_kind") or {}
+    if kinds:
+        print("-- bytes by op kind (trip-aware) --")
+        for k, v in sorted(kinds.items(), key=lambda kv: -kv[1]):
+            print(f"  {k:24s} {v:.3e}  ({v/max(rl['hbm_bytes'],1):5.1%})")
+    print("-- collectives (per-kind, single-visit) --")
+    for k, v in rec["collectives"].items():
+        if isinstance(v, (int, float)) and v and k not in ("count",):
+            print(f"  {k:24s} {v:.3e}")
+    if args.save:
+        with open(args.save, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,283 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST execute before any jax import (jax locks the
+device count at first init): 512 host platform devices let jax.make_mesh
+build the production 16x16 and 2x16x16 meshes on this CPU-only box.
+
+Per cell this records: memory_analysis (fits-per-device proof),
+cost_analysis (FLOPs/bytes for the roofline), and the collective bytes
+parsed from the compiled HLO. Results append incrementally to
+experiments/dryrun_<mesh>.json so interrupted sweeps resume.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import registry  # noqa: E402
+from repro.configs.base import SHAPES  # noqa: E402
+from repro.core.attention import AttentionConfig  # noqa: E402
+from repro.distributed import params as P  # noqa: E402
+from repro.distributed.sharding import lm_rules, use_rules  # noqa: E402
+from repro.launch import steps  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import lm, whisper  # noqa: E402
+from repro.training.optimizer import AdamWConfig, init_opt_state  # noqa: E402
+from repro.utils import flops as F  # noqa: E402
+from repro.utils.hlo_analysis import Roofline, collective_bytes  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments")
+
+
+def attention_config(cfg, overrides: Optional[dict] = None) -> AttentionConfig:
+    """Dry-run attention config: flash_xla so cost_analysis sees the FLOPs.
+    Context-parallel (sequence-sharded) archs use the dense tile schedule;
+    heads-sharded archs use packed causal tiles (block skipping visible)."""
+    kw = dict(
+        impl="flash_xla",
+        mode="dense" if cfg.attn_sharding == "sequence" else "packed",
+        # 1024x1024 from the Section-Perf block sweep (EXPERIMENTS.md):
+        # -18% memory term vs 512^2; 2048^2 gains only a further -7% while
+        # quadrupling the S-tile working set.
+        block_q=1024,
+        block_kv=1024,
+        decode_splits=16,
+    )
+    if overrides:
+        kw.update(overrides)
+    return AttentionConfig(**kw)
+
+
+def param_shapes(cfg):
+    init = whisper.init_whisper if cfg.family == "encdec" else lm.init_lm
+    return jax.eval_shape(lambda: init(cfg, jax.random.PRNGKey(0)))
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    attn_overrides: Optional[dict] = None,
+    ce_chunk: int = 512,
+    compile_: bool = True,
+):
+    cfg = registry.get(arch)
+    shape = SHAPES[shape_name]
+    skip = registry.skip_reason(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": skip}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    rules = lm_rules(
+        cfg, pods=multi_pod, decode=(shape.kind == "decode"),
+        batch_size=shape.global_batch,
+    )
+    attn_cfg = attention_config(cfg, attn_overrides)
+    specs = registry.input_specs(cfg, shape)
+    t0 = time.time()
+    with mesh, use_rules(mesh, rules):
+        p_shapes = param_shapes(cfg)
+        p_shard = P.tree_shardings(p_shapes, mesh, rules)
+        if shape.kind == "train":
+            opt_shapes = jax.eval_shape(init_opt_state, p_shapes)
+            opt_shard = P.tree_shardings(opt_shapes, mesh, rules)
+            batch_shard = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(mesh, s), P.batch_specs(specs, rules)
+            )
+            step = steps.build_train_step(
+                cfg, attn_cfg, AdamWConfig(), ce_chunk=ce_chunk
+            )
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, opt_shard, batch_shard),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(p_shapes, opt_shapes, specs)
+        elif shape.kind == "prefill":
+            batch_shard = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(mesh, s), P.batch_specs(specs, rules)
+            )
+            step = steps.build_prefill_step(cfg, attn_cfg, cache_size=shape.seq_len)
+            jitted = jax.jit(step, in_shardings=(p_shard, batch_shard))
+            lowered = jitted.lower(p_shapes, specs)
+        else:  # decode
+            arg_shard = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(mesh, s), P.batch_specs(specs, rules)
+            )
+            step = steps.build_serve_step(cfg, attn_cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, arg_shard["token"], arg_shard["caches"],
+                              arg_shard["cache_len"]),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(
+                p_shapes, specs["token"], specs["caches"], specs["cache_len"]
+            )
+        t_lower = time.time() - t0
+        rec = {
+            "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "chips": chips, "status": "lowered", "t_lower_s": round(t_lower, 1),
+            "attn": dataclasses_dict(attn_cfg), "ce_chunk": ce_chunk,
+        }
+        if not compile_:
+            return rec, lowered, None
+        compiled = lowered.compile()
+        rec["t_compile_s"] = round(time.time() - t0 - t_lower, 1)
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo_text = compiled.as_text()
+        # Trip-count-aware walk of the compiled module: XLA's own
+        # cost_analysis counts while bodies once (verified), which
+        # undercounts every scan (layers, flash KV loop, CE chunks).
+        from repro.utils.hlo_walker import HloModule
+
+        walker = HloModule(hlo_text)
+        wcost = walker.entry_cost()
+        coll = collective_bytes(hlo_text)  # unscaled per-kind breakdown
+        n_params, n_active = F.param_count(cfg)
+        rl = Roofline(
+            flops=wcost.flops,  # per-chip (SPMD partition program)
+            hbm_bytes=wcost.bytes,
+            coll_bytes=wcost.coll_bytes,
+            chips=chips,
+            model_flops=F.model_flops(cfg, shape) / chips,
+        )
+        # Deployment roofline: swap the measured XLA-fallback traffic of the
+        # tagged flash regions for the Pallas kernel's analytic traffic
+        # (utils.flops.flash_kernel_bytes; see EXPERIMENTS.md Section Roofline).
+        kernel_bytes = F.flash_kernel_bytes(
+            cfg, shape, block_q=attn_cfg.block_q, block_kv=attn_cfg.block_kv,
+            multi_pod=multi_pod,
+        )
+        rl_kernel = None
+        if kernel_bytes > 0 and wcost.flash_bytes > 0:
+            rl_kernel = Roofline(
+                flops=wcost.flops,
+                hbm_bytes=max(wcost.bytes - wcost.flash_bytes, 0.0) + kernel_bytes,
+                coll_bytes=wcost.coll_bytes,
+                chips=chips,
+                model_flops=F.model_flops(cfg, shape) / chips,
+            )
+        rec.update(
+            status="ok",
+            params_total=n_params,
+            params_active=n_active,
+            memory={
+                "bytes_per_device": getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                - getattr(mem, "alias_size_in_bytes", 0),
+                "temp": getattr(mem, "temp_size_in_bytes", None),
+                "args": getattr(mem, "argument_size_in_bytes", None),
+                "output": getattr(mem, "output_size_in_bytes", None),
+                "alias": getattr(mem, "alias_size_in_bytes", None),
+                "generated_code": getattr(mem, "generated_code_size_in_bytes", None),
+            },
+            cost={
+                "flops": wcost.flops,
+                "bytes": wcost.bytes,
+                "transcendentals": wcost.transcendentals,
+                "xla_cost_analysis_flops": float(cost.get("flops", 0.0)),
+                "xla_cost_analysis_bytes": float(cost.get("bytes accessed", 0.0)),
+                "walker_warnings": walker.warnings[:5],
+            },
+            collectives={**coll, "trip_aware_total": wcost.coll_bytes},
+            bytes_by_kind=wcost.by_kind,
+            flash_region={"measured_xla_bytes": wcost.flash_bytes,
+                          "analytic_kernel_bytes": kernel_bytes},
+            roofline=rl.to_dict(),
+            roofline_kernel=rl_kernel.to_dict() if rl_kernel else None,
+        )
+        return rec
+
+
+def dataclasses_dict(dc):
+    import dataclasses as _d
+
+    return {f.name: getattr(dc, f.name) for f in _d.fields(dc)}
+
+
+def results_path(multi_pod: bool) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, f"dryrun_{'multipod' if multi_pod else 'singlepod'}.json")
+
+
+def load_results(multi_pod: bool) -> dict:
+    path = results_path(multi_pod)
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_result(rec: dict, multi_pod: bool):
+    all_ = load_results(multi_pod)
+    all_[f"{rec['arch']}::{rec['shape']}"] = rec
+    with open(results_path(multi_pod), "w") as f:
+        json.dump(all_, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--ce-chunk", type=int, default=512)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in registry.names():
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch + --shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    done = load_results(args.multi_pod) if args.skip_done else {}
+    for arch, shape in cells:
+        key = f"{arch}::{shape}"
+        if key in done and done[key].get("status") in ("ok", "skipped"):
+            print(f"[dryrun] {key}: already done, skipping")
+            continue
+        print(f"[dryrun] {key} multi_pod={args.multi_pod} ...", flush=True)
+        try:
+            rec = lower_cell(arch, shape, multi_pod=args.multi_pod, ce_chunk=args.ce_chunk)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "multi_pod": args.multi_pod,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+        save_result(rec, args.multi_pod)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            extra = (f" mem/dev={rec['memory']['bytes_per_device']/2**30:.2f}GiB"
+                     f" flops={rec['cost']['flops']:.3e}"
+                     f" coll={rec['collectives']['total']:.3e}B"
+                     f" dom={rec['roofline']['dominant']}")
+        elif status == "error":
+            extra = " " + rec["error"][:200]
+        print(f"[dryrun] {key}: {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

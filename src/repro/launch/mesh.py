@@ -1,0 +1,28 @@
+"""Production mesh builders.
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods x 256 chips as (pod=2, data=16, model=16); the `pod`
+axis carries only the once-per-step gradient all-reduce (it crosses the
+slow pod-to-pod links), `data` is FSDP + batch, `model` is tensor/context
+parallelism within a pod's fast ICI.
+
+Functions, not module-level constants: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS *before* first jax use).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Tiny mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"))

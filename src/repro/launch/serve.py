@@ -1,0 +1,72 @@
+"""Serving driver: load (or init) a model and run the continuous-batching
+engine over a file or synthetic stream of requests.
+
+Usage:
+  python -m repro.launch.serve --arch qwen3-8b --reduce --requests 8
+  python -m repro.launch.serve --arch hymba-1.5b --reduce --ckpt-dir /ck
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+from repro.configs import registry
+from repro.core.attention import AttentionConfig
+from repro.models import lm
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduce", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--cache", type=int, default=256)
+    ap.add_argument("--attn", default="flash_xla")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = registry.get(args.arch)
+    if args.reduce:
+        cfg = registry.reduce_config(cfg)
+    assert cfg.family != "encdec", "serve driver covers decoder-only families"
+    params = lm.init_lm(cfg, jax.random.PRNGKey(args.seed))
+    if args.ckpt_dir:
+        store = CheckpointStore(args.ckpt_dir)
+        if store.latest_step() is not None:
+            (params, _), meta = store.restore((params, None))
+            print(f"[serve] restored step {meta.get('step')} from {args.ckpt_dir}")
+
+    attn_cfg = AttentionConfig(impl=args.attn, block_q=128, block_kv=128,
+                               decode_splits=4)
+    engine = ServingEngine(cfg, params, attn_cfg, max_batch=args.max_batch,
+                           cache_size=args.cache)
+    rng = np.random.default_rng(args.seed)
+    for rid in range(args.requests):
+        prompt = rng.integers(1, min(cfg.vocab_size, 1000),
+                              size=int(rng.integers(2, 12))).tolist()
+        engine.submit(Request(rid=rid, prompt=prompt, max_new_tokens=args.max_new))
+
+    t0 = time.perf_counter()
+    finished = engine.run(max_ticks=10_000)
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.generated) for r in finished.values())
+    print(json.dumps({
+        "requests": len(finished), "ticks": engine.ticks,
+        "generated_tokens": toks, "tok_per_s": round(toks / dt, 1),
+    }))
+    for rid in sorted(finished)[:4]:
+        print(f"  req {rid}: {finished[rid].generated}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Step builders: the jit'd train / prefill / serve step for any arch.
+
+These close over (ModelConfig, AttentionConfig, AdamWConfig) and present
+uniform signatures across all 10 architectures:
+
+  train_step(params, opt_state, batch)        -> (params, opt_state, metrics)
+  prefill_step(params, batch)                 -> (next_token, caches, lens)
+  serve_step(params, token, caches, cache_len)-> (next_token, new_caches)
+
+Gradient accumulation: ``microbatches > 1`` scans over batch slices
+accumulating fp32 grads (same numerics as one big batch; the loss is
+token-mean so we average the per-micro grads).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.attention import AttentionConfig
+from repro.models import lm, whisper
+from repro.training.losses import chunked_cross_entropy
+from repro.training.optimizer import AdamWConfig, OptState, apply_updates
+
+
+def _embed_params(cfg: ModelConfig, params):
+    return params["decoder"]["embed"] if cfg.family == "encdec" else params["embed"]
+
+
+def loss_fn(cfg: ModelConfig, attn_cfg: AttentionConfig, params, batch, ce_chunk: int = 512):
+    if cfg.family == "encdec":
+        hidden, aux, nprefix = whisper.forward(
+            cfg, params, batch["frames"], batch["inputs"], attn_cfg
+        )
+    else:
+        hidden, aux, nprefix = lm.forward(
+            cfg, params, batch["inputs"], attn_cfg, patches=batch.get("patches")
+        )
+    if nprefix:
+        hidden = hidden[:, nprefix:]
+    loss, metrics = chunked_cross_entropy(
+        _embed_params(cfg, params), cfg.tie_embeddings, hidden, batch["targets"],
+        vocab_valid=cfg.vocab_size, chunk=ce_chunk,
+    )
+    return loss + aux, {"ce_loss": loss, "aux_loss": aux, **metrics}
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    attn_cfg: AttentionConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int = 1,
+    ce_chunk: int = 512,
+):
+    grad_fn = jax.value_and_grad(
+        functools.partial(loss_fn, cfg, attn_cfg, ce_chunk=ce_chunk),
+        argnums=0, has_aux=True,
+    )
+
+    def train_step(params, opt_state: OptState, batch):
+        if microbatches > 1:
+            B = batch["inputs"].shape[0]
+            assert B % microbatches == 0
+
+            def split(t):
+                return t.reshape(microbatches, B // microbatches, *t.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                g_acc, l_acc, m_acc = acc
+                (l, m), g = grad_fn(params, mb)
+                g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g, l_acc + l, {k: m_acc[k] + m[k] for k in m_acc}), None
+
+            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            m0 = {k: jnp.zeros((), jnp.float32)
+                  for k in ("ce_loss", "aux_loss", "nll_sum", "tokens", "accuracy")}
+            (grads, loss, metrics), _ = jax.lax.scan(
+                body, (g0, jnp.zeros(()), m0), micro
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = {k: v / microbatches for k, v in metrics.items()}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        # Gradient sync dtype: grads reach here already in the compute dtype
+        # (bf16 -- jax cotangent dtype rules), which is the brief's gradient
+        # compression. NOTE (EXPERIMENTS.md Section Perf, deepseek iters 5a/5b):
+        # XLA's partitioner still all-reduces the per-layer partials in fp32
+        # inside the backward scan; neither a post-hoc cast nor an
+        # optimization_barrier moved it -- both hypotheses refuted, recorded.
+        new_params, new_opt, om = apply_updates(
+            opt_cfg, opt_state, grads, param_dtype=jnp.dtype(cfg.dtype)
+        )
+        return new_params, new_opt, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, attn_cfg: AttentionConfig, cache_size: int):
+    def prefill_step(params, batch):
+        if cfg.family == "encdec":
+            from repro.models.layers import unembed
+
+            h_last, caches, tlen = whisper.prefill(
+                cfg, params, batch["frames"], batch["inputs"], attn_cfg, cache_size
+            )
+            logits = unembed(params["decoder"]["embed"], h_last, cfg.tie_embeddings)
+        else:
+            h_last, caches, tlen = lm.prefill(
+                cfg, params, batch["inputs"], attn_cfg, cache_size,
+                patches=batch.get("patches"),
+            )
+            logits = lm.logits_from_hidden(cfg, params, h_last)
+        next_token = jnp.argmax(logits[..., : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        B = next_token.shape[0]
+        lens = jnp.full((B,), tlen, jnp.int32)
+        return next_token, caches, lens
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig, attn_cfg: AttentionConfig):
+    def serve_step(params, token, caches, cache_len):
+        if cfg.family == "encdec":
+            logits, new_caches = whisper.decode_step(
+                cfg, params, token, caches, cache_len, attn_cfg
+            )
+        else:
+            logits, new_caches = lm.decode_step(
+                cfg, params, token, caches, cache_len, attn_cfg
+            )
+        next_token = jnp.argmax(logits[..., : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        return next_token, new_caches
+
+    return serve_step

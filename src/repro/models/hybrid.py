@@ -1,0 +1,75 @@
+"""Hymba-style hybrid head block: parallel attention + Mamba on the same
+input, outputs fused by per-branch RMSNorm and averaging (arXiv:2411.13676).
+
+The attention half uses the FA2 stack (SWA for 'hybrid' layers, full for
+'hybrid_global'); meta tokens are handled at the model level as a learnable
+prefix + sink mask. The SSM half is models.mamba. KV/SSM caches for decode
+hold both branches' state.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import AttentionConfig
+from repro.core.masks import MaskSpec
+from repro.models.attention_layer import (
+    apply_attention,
+    decode_attention_step,
+    init_attention,
+    prefill_attention,
+)
+from repro.models.layers import rms_norm_vec
+from repro.models.mamba import apply_mamba, decode_mamba_step, init_mamba
+
+
+def init_hybrid(key, cfg, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": init_attention(k1, cfg, dtype),
+        "ssm": init_mamba(k2, cfg, dtype),
+        "attn_out_norm": jnp.ones((cfg.d_model,), dtype),
+        "ssm_out_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def _fuse(p, y_attn, y_ssm, eps):
+    return 0.5 * (
+        rms_norm_vec(y_attn, p["attn_out_norm"], eps)
+        + rms_norm_vec(y_ssm, p["ssm_out_norm"], eps)
+    )
+
+
+def apply_hybrid(
+    p, cfg, x, positions, spec: MaskSpec, attn_cfg: AttentionConfig,
+    *, rope_theta: float, remat: bool = True,
+) -> jnp.ndarray:
+    y_a = apply_attention(p["attn"], cfg, x, positions, spec, attn_cfg, rope_theta=rope_theta)
+    y_s = apply_mamba(p["ssm"], cfg, x, remat=remat)
+    return _fuse(p, y_a, y_s, cfg.norm_eps)
+
+
+def prefill_hybrid(
+    p, cfg, x, positions, spec, attn_cfg, *, rope_theta, cache_size=None, remat=True,
+) -> Tuple[jnp.ndarray, dict]:
+    y_a, kv = prefill_attention(
+        p["attn"], cfg, x, positions, spec, attn_cfg,
+        rope_theta=rope_theta, cache_size=cache_size,
+    )
+    y_s, ssm_state = apply_mamba(p["ssm"], cfg, x, remat=remat, return_state=True)
+    return _fuse(p, y_a, y_s, cfg.norm_eps), {"kv": kv, "ssm": ssm_state}
+
+
+def decode_hybrid_step(
+    p, cfg, x_new, cache: dict, cache_len, attn_cfg,
+    *, rope_theta, window: Optional[int], sink: int,
+) -> Tuple[jnp.ndarray, dict]:
+    y_a, kv = decode_attention_step(
+        p["attn"], cfg, x_new, cache["kv"], cache_len, attn_cfg,
+        rope_theta=rope_theta, window=window, sink=sink,
+    )
+    y_s, ssm_state = decode_mamba_step(p["ssm"], cfg, x_new, cache["ssm"])
+    return _fuse(p, y_a, y_s, cfg.norm_eps), {"kv": kv, "ssm": ssm_state}

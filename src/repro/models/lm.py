@@ -1,0 +1,336 @@
+"""Generic decoder-only LM covering the dense / MoE / SSM / hybrid / VLM
+families, with scan-over-layer-groups so HLO size is depth-independent.
+
+A model is: embed (+ optional vision-patch prefix, + optional learnable
+meta-token prefix) -> num_groups x layer_pattern (lax.scan, remat) ->
+tail layers (unrolled) -> final norm. Heads:
+  forward()      hidden states (loss/unembed applied by the caller so the
+                 training loss can chunk the vocab dim)
+  prefill()      hidden of the last position + per-layer decode caches
+  decode_step()  one token in, logits + updated caches
+
+Layer kinds (configs.base.LAYER_KINDS) pick the mixer: FA2 attention
+(global or SWA), Mamba, or Hymba hybrid. MoE replaces the MLP when
+cfg.moe is set. All masks are MaskSpec-symbolic; meta tokens become a
+`sink` prefix for windowed layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import AttentionConfig
+from repro.core.masks import MaskSpec
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.attention_layer import (
+    apply_attention,
+    decode_attention_step,
+    init_attention,
+    prefill_attention,
+)
+from repro.models.hybrid import (
+    apply_hybrid,
+    decode_hybrid_step,
+    init_hybrid,
+    prefill_hybrid,
+)
+from repro.models.mamba import apply_mamba, decode_mamba_step, init_mamba
+from repro.models.moe import apply_moe, init_moe
+
+
+# ---------------------------------------------------------------------------
+# Per-kind helpers
+# ---------------------------------------------------------------------------
+
+
+def _spec_for(cfg, kind: str) -> MaskSpec:
+    window = cfg.kind_window(kind)
+    sink = cfg.meta_tokens if (window is not None and cfg.meta_tokens) else 0
+    return MaskSpec(causal=True, window=window, sink=sink)
+
+
+def _theta_for(cfg, kind: str) -> float:
+    if kind == "attn_local" and cfg.rope_theta_local is not None:
+        return cfg.rope_theta_local
+    return cfg.rope_theta
+
+
+def _has_mlp(cfg, kind: str) -> bool:
+    return kind != "mamba"
+
+
+def init_layer(kind: str, key, cfg, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": L.init_norm(cfg, dtype)}
+    if kind in ("attn", "attn_local"):
+        p["mixer"] = init_attention(ks[0], cfg, dtype)
+    elif kind == "mamba":
+        p["mixer"] = init_mamba(ks[0], cfg, dtype)
+    elif kind in ("hybrid", "hybrid_global"):
+        p["mixer"] = init_hybrid(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if _has_mlp(cfg, kind):
+        p["ln2"] = L.init_norm(cfg, dtype)
+        if cfg.moe is not None:
+            p["mlp"] = init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg, cfg.d_ff, dtype)
+    return p
+
+
+def _apply_mlp_block(p, cfg, x):
+    """Second residual sub-block; returns (delta, aux)."""
+    h = L.apply_norm(p["ln2"], x, cfg.norm_eps, cfg.norm)
+    if cfg.moe is not None:
+        return apply_moe(p["mlp"], cfg, h)
+    return L.apply_mlp(p["mlp"], h, cfg.mlp), jnp.zeros((), jnp.float32)
+
+
+def apply_layer(kind, p, cfg, x, positions, attn_cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = L.apply_norm(p["ln1"], x, cfg.norm_eps, cfg.norm)
+    spec = _spec_for(cfg, kind)
+    if kind in ("attn", "attn_local"):
+        mix = apply_attention(
+            p["mixer"], cfg, h, positions, spec, attn_cfg, rope_theta=_theta_for(cfg, kind)
+        )
+    elif kind == "mamba":
+        mix = apply_mamba(p["mixer"], cfg, h, remat=cfg.remat)
+    else:
+        mix = apply_hybrid(
+            p["mixer"], cfg, h, positions, spec, attn_cfg,
+            rope_theta=_theta_for(cfg, kind), remat=cfg.remat,
+        )
+    x = x + mix
+    aux = jnp.zeros((), jnp.float32)
+    if _has_mlp(cfg, kind):
+        delta, aux = _apply_mlp_block(p, cfg, x)
+        x = x + delta
+    return constrain(x, "batch", "seq", "embed"), aux
+
+
+def prefill_layer(kind, p, cfg, x, positions, attn_cfg, cache_size):
+    h = L.apply_norm(p["ln1"], x, cfg.norm_eps, cfg.norm)
+    spec = _spec_for(cfg, kind)
+    if kind in ("attn", "attn_local"):
+        mix, cache = prefill_attention(
+            p["mixer"], cfg, h, positions, spec, attn_cfg,
+            rope_theta=_theta_for(cfg, kind), cache_size=cache_size,
+        )
+        cache = {"kv": cache}
+    elif kind == "mamba":
+        mix, ssm = apply_mamba(p["mixer"], cfg, h, remat=cfg.remat, return_state=True)
+        cache = {"ssm": ssm}
+    else:
+        mix, cache = prefill_hybrid(
+            p["mixer"], cfg, h, positions, spec, attn_cfg,
+            rope_theta=_theta_for(cfg, kind), cache_size=cache_size, remat=cfg.remat,
+        )
+    x = x + mix
+    if _has_mlp(cfg, kind):
+        delta, _ = _apply_mlp_block(p, cfg, x)
+        x = x + delta
+    return constrain(x, "batch", "seq", "embed"), cache
+
+
+def decode_layer(kind, p, cfg, x, cache, cache_len, attn_cfg):
+    h = L.apply_norm(p["ln1"], x, cfg.norm_eps, cfg.norm)
+    spec = _spec_for(cfg, kind)
+    theta = _theta_for(cfg, kind)
+    if kind in ("attn", "attn_local"):
+        mix, kv = decode_attention_step(
+            p["mixer"], cfg, h, cache["kv"], cache_len, attn_cfg,
+            rope_theta=theta, window=spec.window, sink=spec.sink,
+        )
+        new_cache = {"kv": kv}
+    elif kind == "mamba":
+        mix, ssm = decode_mamba_step(p["mixer"], cfg, h, cache["ssm"])
+        new_cache = {"ssm": ssm}
+    else:
+        mix, new_cache = decode_hybrid_step(
+            p["mixer"], cfg, h, cache, cache_len, attn_cfg,
+            rope_theta=theta, window=spec.window, sink=spec.sink,
+        )
+    x = x + mix
+    if _has_mlp(cfg, kind):
+        delta, _ = _apply_mlp_block(p, cfg, x)
+        x = x + delta
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Whole model
+# ---------------------------------------------------------------------------
+
+
+def init_lm(cfg, key, dtype=None) -> dict:
+    cfg.validate()
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": L.init_embedding(keys[0], cfg, dtype),
+        "ln_f": L.init_norm(cfg, dtype),
+    }
+    if cfg.meta_tokens:
+        params["meta"] = L._normal(keys[1], (cfg.meta_tokens, cfg.d_model), 0.02, dtype)
+
+    U, NG = cfg.group_size, cfg.num_groups
+    if NG:
+        def init_group(gkey):
+            gks = jax.random.split(gkey, U)
+            return {f"slot_{u}": init_layer(cfg.layer_pattern[u], gks[u], cfg, dtype)
+                    for u in range(U)}
+
+        group_keys = jax.random.split(keys[2], NG)
+        if cfg.scan_layers and NG > 1:
+            params["groups"] = jax.vmap(init_group)(group_keys)
+        else:
+            params["groups"] = [init_group(k) for k in group_keys]
+    tail = cfg.tail_pattern
+    if tail:
+        tks = jax.random.split(keys[3], len(tail))
+        params["tail"] = [init_layer(kind, tks[i], cfg, dtype) for i, kind in enumerate(tail)]
+    return params
+
+
+def _embed_inputs(cfg, params, tokens, patches=None):
+    """tokens (B,S) [+ patches (B,P,d)] -> (h, positions, n_prefix)."""
+    h = L.embed_tokens(params["embed"], tokens)
+    if cfg.embed_scale_by_dim:
+        h = (h.astype(jnp.float32) * (cfg.d_model ** 0.5)).astype(h.dtype)
+    parts = []
+    if patches is not None:
+        parts.append(patches.astype(h.dtype))
+    if cfg.meta_tokens:
+        meta = jnp.broadcast_to(
+            params["meta"][None], (h.shape[0], cfg.meta_tokens, cfg.d_model)
+        )
+        parts = [meta] + parts
+    if parts:
+        h = jnp.concatenate(parts + [h], axis=1)
+    S = h.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    if cfg.learned_pos_embed:
+        h = h + params["embed"]["positions"][:S][None].astype(h.dtype)
+    n_prefix = S - tokens.shape[1]
+    return constrain(h, "batch", "seq", "embed"), positions, n_prefix
+
+
+def _run_groups(cfg, params, h, positions, attn_cfg):
+    """Scan the grouped layers; returns (h, aux_sum)."""
+    U = cfg.group_size
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def group_body(carry, gp):
+        x, aux = carry
+        for u, kind in enumerate(cfg.layer_pattern):
+            x, a = apply_layer(kind, gp[f"slot_{u}"], cfg, x, positions, attn_cfg)
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(group_body, prevent_cse=False) if cfg.remat else group_body
+    if cfg.num_groups:
+        if cfg.scan_layers and cfg.num_groups > 1:
+            (h, aux0), _ = jax.lax.scan(body, (h, aux0), params["groups"])
+        else:
+            gs = params["groups"]
+            for gp in gs:
+                (h, aux0), _ = body((h, aux0), gp)
+    for i, kind in enumerate(cfg.tail_pattern):
+        h, a = apply_layer(kind, params["tail"][i], cfg, h, positions, attn_cfg)
+        aux0 = aux0 + a
+    return h, aux0
+
+
+def forward(cfg, params, tokens, attn_cfg: AttentionConfig, patches=None):
+    """-> (hidden (B, S_total, d), aux_loss, n_prefix). Caller unembeds."""
+    h, positions, n_prefix = _embed_inputs(cfg, params, tokens, patches)
+    h, aux = _run_groups(cfg, params, h, positions, attn_cfg)
+    h = L.apply_norm(params["ln_f"], h, cfg.norm_eps, cfg.norm)
+    return h, aux, n_prefix
+
+
+def logits_from_hidden(cfg, params, hidden):
+    return L.unembed(params["embed"], hidden, cfg.tie_embeddings)
+
+
+# ------------------------------------------------------------------ serving
+
+
+def prefill(cfg, params, tokens, attn_cfg: AttentionConfig, cache_size: int, patches=None):
+    """-> (hidden_last (B,1,d), caches, total_len). Caches are per-layer
+    trees stacked over groups; cache_size is the padded KV capacity."""
+    h, positions, n_prefix = _embed_inputs(cfg, params, tokens, patches)
+
+    def group_body(x, gp):
+        caches = {}
+        for u, kind in enumerate(cfg.layer_pattern):
+            x, c = prefill_layer(kind, gp[f"slot_{u}"], cfg, x, positions, attn_cfg, cache_size)
+            caches[f"slot_{u}"] = c
+        return x, caches
+
+    caches: Dict[str, Any] = {}
+    if cfg.num_groups:
+        if cfg.scan_layers and cfg.num_groups > 1:
+            h, caches["groups"] = jax.lax.scan(group_body, h, params["groups"])
+        else:
+            caches["groups"] = []
+            for gp in params["groups"]:
+                h, c = group_body(h, gp)
+                caches["groups"].append(c)
+    if cfg.tail_pattern:
+        caches["tail"] = []
+        for i, kind in enumerate(cfg.tail_pattern):
+            h, c = prefill_layer(kind, params["tail"][i], cfg, h, positions, attn_cfg, cache_size)
+            caches["tail"].append(c)
+    h = L.apply_norm(params["ln_f"], h, cfg.norm_eps, cfg.norm)
+    total_len = h.shape[1]
+    return h[:, -1:], caches, total_len
+
+
+def decode_step(cfg, params, token, caches, cache_len, attn_cfg: AttentionConfig):
+    """token (B,1) int32; cache_len (B,) valid entries per sequence.
+    -> (logits (B,1,V), new_caches)."""
+    h = L.embed_tokens(params["embed"], token)
+    if cfg.embed_scale_by_dim:
+        h = (h.astype(jnp.float32) * (cfg.d_model ** 0.5)).astype(h.dtype)
+    if cfg.learned_pos_embed:
+        pos_e = jnp.take(params["embed"]["positions"], cache_len, axis=0)[:, None]
+        h = h + pos_e.astype(h.dtype)
+
+    def group_body(x, gp_cache):
+        gp, cache = gp_cache
+        new_caches = {}
+        for u, kind in enumerate(cfg.layer_pattern):
+            x, nc = decode_layer(
+                kind, gp[f"slot_{u}"], cfg, x, cache[f"slot_{u}"], cache_len, attn_cfg
+            )
+            new_caches[f"slot_{u}"] = nc
+        return x, new_caches
+
+    new_caches: Dict[str, Any] = {}
+    if cfg.num_groups:
+        if cfg.scan_layers and cfg.num_groups > 1:
+            h, new_caches["groups"] = jax.lax.scan(
+                group_body, h, (params["groups"], caches["groups"])
+            )
+        else:
+            new_caches["groups"] = []
+            for gp, c in zip(params["groups"], caches["groups"]):
+                h, nc = group_body(h, (gp, c))
+                new_caches["groups"].append(nc)
+    if cfg.tail_pattern:
+        new_caches["tail"] = []
+        for i, kind in enumerate(cfg.tail_pattern):
+            h, nc = decode_layer(
+                kind, params["tail"][i], cfg, h, caches["tail"][i], cache_len, attn_cfg
+            )
+            new_caches["tail"].append(nc)
+    h = L.apply_norm(params["ln_f"], h, cfg.norm_eps, cfg.norm)
+    logits = logits_from_hidden(cfg, params, h)
+    return logits, new_caches

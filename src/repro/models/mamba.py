@@ -1,0 +1,178 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b; also the SSM half of Hymba).
+
+TPU adaptation: the CUDA selective-scan kernel keeps h in SRAM over a
+sequential time loop. The JAX/TPU-native equivalent is a *chunked
+associative scan*: an outer ``lax.scan`` over time-chunks carries the
+(B, d_inner, d_state) state in registers/VMEM, and within a chunk the
+linear recurrence h_t = a_t h_{t-1} + b_t is evaluated with
+``jax.lax.associative_scan`` (log-depth, VPU-friendly). The (chunk, d_inner,
+d_state) tensors exist only inside the (remat'ed) chunk body, so memory
+stays O(S/chunk * d_inner * d_state) for the saved carries -- linear in S,
+analogous to FlashAttention's O(N) residual memory.
+
+FA2 applicability note (DESIGN.md Section 4): this block is attention-free;
+the paper's technique does not apply here and the arch runs without it.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import _normal, rms_norm_vec
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or math.ceil(cfg.d_model / 16)
+    return d_in, dt_rank, s.d_state, s.d_conv
+
+
+def init_mamba(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    d_in, dt_rank, d_state, d_conv = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": _normal(ks[0], (d, 2 * d_in), 1.0 / math.sqrt(d), dtype),
+        "conv_w": _normal(ks[1], (d_conv, d_in), 1.0 / math.sqrt(d_conv), dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": _normal(ks[2], (d_in, dt_rank + 2 * d_state), 1.0 / math.sqrt(d_in), dtype),
+        "dt_w": _normal(ks[3], (dt_rank, d_in), 1.0 / math.sqrt(dt_rank), dtype),
+        "dt_bias": jnp.full((d_in,), math.log(math.expm1(0.01)), dtype),  # softplus^-1(0.01)
+        # S4D-real init: A = -(1..d_state) per channel
+        "A_log": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, d_state + 1, dtype=jnp.float32)), (d_in, d_state)
+        ).astype(jnp.float32),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": _normal(ks[4], (d_in, d), 1.0 / math.sqrt(d_in), dtype),
+    }
+    if cfg.ssm.bcdt_norm:  # falcon-mamba stability norms
+        p["dt_norm"] = jnp.ones((dt_rank,), dtype)
+        p["b_norm"] = jnp.ones((d_state,), dtype)
+        p["c_norm"] = jnp.ones((d_state,), dtype)
+    return p
+
+
+def _conv_causal(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv along seq. x (B,S,din); w (W,din).
+
+    state: (B, W-1, din) tail of the previous segment (decode), else zeros.
+    """
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(W))
+    return y + b
+
+
+def _ssm_inputs(p, cfg, x_conv):
+    """Project conv output to (dt, B, C) with optional falcon norms."""
+    d_in, dt_rank, d_state, _ = _dims(cfg)
+    dbc = jnp.einsum("bsi,ir->bsr", x_conv, p["x_proj"])
+    dt_low = dbc[..., :dt_rank]
+    B_ = dbc[..., dt_rank : dt_rank + d_state]
+    C_ = dbc[..., dt_rank + d_state :]
+    if "dt_norm" in p:
+        dt_low = rms_norm_vec(dt_low, p["dt_norm"], cfg.norm_eps)
+        B_ = rms_norm_vec(B_, p["b_norm"], cfg.norm_eps)
+        C_ = rms_norm_vec(C_, p["c_norm"], cfg.norm_eps)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_low, p["dt_w"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )  # (B,S,d_in) fp32
+    return dt, B_.astype(jnp.float32), C_.astype(jnp.float32)
+
+
+def _chunk_scan(dt, B_, C_, x_conv, A, h0, *, remat: bool):
+    """Linear recurrence over one layer. dt (B,S,din) fp32; returns (y, h_last)."""
+    Bsz, S, d_in = dt.shape
+    d_state = A.shape[-1]
+
+    def chunk_body(h, xs):
+        dt_c, B_c, C_c, u_c = xs  # (B, c, ...)
+        a = jnp.exp(dt_c[..., None] * A)  # (B,c,din,state)
+        bx = dt_c[..., None] * B_c[:, :, None, :] * u_c[..., None].astype(jnp.float32)
+
+        def op(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        cum_a, cum_b = jax.lax.associative_scan(op, (a, bx), axis=1)
+        hs = cum_a * h[:, None] + cum_b  # (B,c,din,state)
+        y_c = jnp.einsum("bcis,bcs->bci", hs, C_c)
+        return hs[:, -1], y_c
+
+    body = jax.checkpoint(chunk_body) if remat else chunk_body
+    chunk = min(128, S)
+    n = S // chunk if S % chunk == 0 else 1
+    chunk = S // n
+
+    def split(t):
+        return t.reshape(Bsz, n, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    h_last, ys = jax.lax.scan(body, h0, (split(dt), split(B_), split(C_), split(x_conv)))
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, d_in)
+    return y, h_last
+
+
+def apply_mamba(
+    p: dict, cfg, x: jnp.ndarray, *, remat: bool = True,
+    init_state: Optional[dict] = None, return_state: bool = False,
+):
+    """Full-sequence Mamba block. x (B,S,d) -> y (B,S,d) [+ state dict]."""
+    Bsz, S, _ = x.shape
+    d_in, _, d_state, d_conv = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = constrain(x_in, "batch", "ssm_seq", "inner")
+    conv_state = None if init_state is None else init_state["conv"]
+    x_conv = jax.nn.silu(
+        _conv_causal(x_in, p["conv_w"], p["conv_b"], conv_state).astype(jnp.float32)
+    ).astype(x.dtype)
+    dt, B_, C_ = _ssm_inputs(p, cfg, x_conv)
+    A = -jnp.exp(p["A_log"])  # (din, state) fp32
+    h0 = (
+        jnp.zeros((Bsz, d_in, d_state), jnp.float32)
+        if init_state is None
+        else init_state["h"]
+    )
+    y, h_last = _chunk_scan(dt, B_, C_, x_conv, A, h0, remat=remat)
+    y = (y + p["D"] * x_conv.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    out = constrain(out, "batch", "ssm_seq", "embed")
+    if return_state:
+        state = {"h": h_last, "conv": x_in[:, S - (d_conv - 1):, :]}
+        return out, state
+    return out
+
+
+def decode_mamba_step(p: dict, cfg, x_new: jnp.ndarray, state: dict) -> Tuple[jnp.ndarray, dict]:
+    """Single-token step. x_new (B,1,d); state {'h': (B,din,state),
+    'conv': (B, d_conv-1, din)}."""
+    d_in, _, d_state, d_conv = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x_new, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)  # (B,1,din)
+    conv_in = jnp.concatenate([state["conv"].astype(x_in.dtype), x_in], axis=1)
+    x_conv = jax.nn.silu(
+        (jnp.einsum("bwi,wi->bi", conv_in, p["conv_w"]) + p["conv_b"]).astype(jnp.float32)
+    )[:, None, :].astype(x_new.dtype)  # (B,1,din)
+    dt, B_, C_ = _ssm_inputs(p, cfg, x_conv)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[:, 0, :, None] * A)  # (B,din,state)
+    bx = dt[:, 0, :, None] * B_[:, 0, None, :] * x_conv[:, 0, :, None].astype(jnp.float32)
+    h = a * state["h"] + bx
+    y = jnp.einsum("bis,bs->bi", h, C_[:, 0]) + p["D"] * x_conv[:, 0].astype(jnp.float32)
+    y = y[:, None, :].astype(x_new.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x_new.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    new_state = {"h": h, "conv": conv_in[:, 1:, :]}
+    return out, new_state

@@ -1,0 +1,173 @@
+"""Whisper-style encoder-decoder (whisper-base assignment).
+
+Per the brief, the conv/mel frontend is a STUB: ``input_specs()`` feeds
+precomputed frame embeddings (B, T_frames, d_model) straight into the
+encoder (sinusoidal positions added here). The transformer backbone is
+faithful: pre-LN, full bidirectional encoder self-attention, causal decoder
+self-attention, encoder-decoder cross-attention, GELU MLPs, LayerNorm,
+learned decoder positions, biases on projections.
+
+FA2 applies to all three attention sites; cross-attention exercises the
+asymmetric-N (Sq != Skv, non-causal) tiling path of the kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import AttentionConfig
+from repro.core.masks import CAUSAL, FULL, MaskSpec
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.attention_layer import (
+    _project_kv,
+    apply_attention,
+    cross_attention_step,
+    decode_attention_step,
+    init_attention,
+    prefill_attention,
+)
+
+
+def _init_enc_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg, dtype),
+        "attn": init_attention(k1, cfg, dtype),
+        "ln2": L.init_norm(cfg, dtype),
+        "mlp": L.init_mlp(k2, cfg, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_norm(cfg, dtype),
+        "self": init_attention(k1, cfg, dtype),
+        "lnx": L.init_norm(cfg, dtype),
+        "cross": init_attention(k2, cfg, dtype, cross=True),
+        "ln2": L.init_norm(cfg, dtype),
+        "mlp": L.init_mlp(k3, cfg, cfg.d_ff, dtype),
+    }
+
+
+def init_whisper(cfg, key, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.encoder.num_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "encoder": {
+            "layers": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(enc_keys),
+            "ln_post": L.init_norm(cfg, dtype),
+        },
+        "decoder": {
+            "embed": L.init_embedding(ks[2], cfg, dtype),
+            "layers": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(dec_keys),
+            "ln_f": L.init_norm(cfg, dtype),
+        },
+    }
+
+
+def encode(cfg, params, frames: jnp.ndarray, attn_cfg: AttentionConfig) -> jnp.ndarray:
+    """frames (B, T, d_model) -- precomputed frame embeddings (stub frontend)."""
+    B, T, d = frames.shape
+    h = frames + L.sinusoidal_positions(T, d)[None].astype(frames.dtype)
+    h = constrain(h, "batch", "seq", "embed")
+    positions = jnp.arange(T, dtype=jnp.int32)
+
+    def body(x, lp):
+        y = L.apply_norm(lp["ln1"], x, cfg.norm_eps, cfg.norm)
+        x = x + apply_attention(lp["attn"], cfg, y, positions, FULL, attn_cfg)
+        y = L.apply_norm(lp["ln2"], x, cfg.norm_eps, cfg.norm)
+        x = x + L.apply_mlp(lp["mlp"], y, cfg.mlp)
+        return constrain(x, "batch", "seq", "embed"), None
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    h, _ = jax.lax.scan(body_fn, h, params["encoder"]["layers"])
+    return L.apply_norm(params["encoder"]["ln_post"], h, cfg.norm_eps, cfg.norm)
+
+
+def _dec_embed(cfg, params, tokens, start: int | jnp.ndarray = 0):
+    h = L.embed_tokens(params["decoder"]["embed"], tokens)
+    S = tokens.shape[1]
+    table = params["decoder"]["embed"]["positions"]
+    if isinstance(start, int):
+        pos_e = table[start : start + S][None]
+    else:  # (B,) dynamic decode positions
+        pos_e = jnp.take(table, start, axis=0)[:, None]
+    return h + pos_e.astype(h.dtype)
+
+
+def forward(cfg, params, frames, tokens, attn_cfg: AttentionConfig):
+    """Teacher-forced training forward -> decoder hidden (B, S, d)."""
+    enc = encode(cfg, params, frames, attn_cfg)
+    h = _dec_embed(cfg, params, tokens)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+    def body(x, lp):
+        y = L.apply_norm(lp["ln1"], x, cfg.norm_eps, cfg.norm)
+        x = x + apply_attention(lp["self"], cfg, y, positions, CAUSAL, attn_cfg)
+        y = L.apply_norm(lp["lnx"], x, cfg.norm_eps, cfg.norm)
+        x = x + apply_attention(lp["cross"], cfg, y, positions, FULL, attn_cfg, x_kv=enc)
+        y = L.apply_norm(lp["ln2"], x, cfg.norm_eps, cfg.norm)
+        x = x + L.apply_mlp(lp["mlp"], y, cfg.mlp)
+        return constrain(x, "batch", "seq", "embed"), None
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    h, _ = jax.lax.scan(body_fn, h, params["decoder"]["layers"])
+    h = L.apply_norm(params["decoder"]["ln_f"], h, cfg.norm_eps, cfg.norm)
+    return h, jnp.zeros((), jnp.float32), 0
+
+
+def prefill(cfg, params, frames, tokens, attn_cfg: AttentionConfig, cache_size: int):
+    """-> (hidden_last, caches). caches: per-layer self-KV (padded to
+    cache_size) + cross-KV over the encoder output."""
+    enc = encode(cfg, params, frames, attn_cfg)
+    h = _dec_embed(cfg, params, tokens)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+    def body(x, lp):
+        y = L.apply_norm(lp["ln1"], x, cfg.norm_eps, cfg.norm)
+        dy, kv = prefill_attention(
+            lp["self"], cfg, y, positions, CAUSAL, attn_cfg, cache_size=cache_size
+        )
+        x = x + dy
+        y = L.apply_norm(lp["lnx"], x, cfg.norm_eps, cfg.norm)
+        xk, xv = _project_kv(lp["cross"], cfg, enc)  # cross KV cached once
+        x = x + apply_attention(lp["cross"], cfg, y, positions, FULL, attn_cfg, x_kv=enc)
+        y = L.apply_norm(lp["ln2"], x, cfg.norm_eps, cfg.norm)
+        x = x + L.apply_mlp(lp["mlp"], y, cfg.mlp)
+        return x, {"kv": kv, "cross": {"k": xk, "v": xv}}
+
+    h, caches = jax.lax.scan(body, h, params["decoder"]["layers"])
+    h = L.apply_norm(params["decoder"]["ln_f"], h, cfg.norm_eps, cfg.norm)
+    return h[:, -1:], caches, tokens.shape[1]
+
+
+def decode_step(cfg, params, token, caches, cache_len, attn_cfg: AttentionConfig):
+    """token (B,1); cache_len (B,). -> (logits, new_caches)."""
+    B = token.shape[0]
+    h = _dec_embed(cfg, params, token, start=cache_len)
+
+    def body(x, lp_cache):
+        lp, cache = lp_cache
+        y = L.apply_norm(lp["ln1"], x, cfg.norm_eps, cfg.norm)
+        dy, kv = decode_attention_step(
+            lp["self"], cfg, y, cache["kv"], cache_len, attn_cfg
+        )
+        x = x + dy
+        y = L.apply_norm(lp["lnx"], x, cfg.norm_eps, cfg.norm)
+        enc_n = jnp.full((B,), cache["cross"]["k"].shape[1], jnp.int32)
+        x = x + cross_attention_step(lp["cross"], cfg, y, cache["cross"], enc_n, attn_cfg)
+        y = L.apply_norm(lp["ln2"], x, cfg.norm_eps, cfg.norm)
+        x = x + L.apply_mlp(lp["mlp"], y, cfg.mlp)
+        return x, {"kv": kv, "cross": cache["cross"]}
+
+    h, new_caches = jax.lax.scan(body, h, (params["decoder"]["layers"], caches))
+    h = L.apply_norm(params["decoder"]["ln_f"], h, cfg.norm_eps, cfg.norm)
+    logits = L.unembed(params["decoder"]["embed"], h, cfg.tie_embeddings)
+    return logits, new_caches

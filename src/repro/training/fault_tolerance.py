@@ -1,0 +1,122 @@
+"""Fault tolerance & straggler machinery for thousand-node runs.
+
+Pieces (each unit-tested; wired together in launch/train.py):
+  * StepMonitor -- EWMA/median step-time tracking; flags straggler steps
+    (> threshold x rolling median). At fleet scale the same statistic
+    per-host identifies slow hosts for eviction; here it feeds telemetry
+    and the checkpoint cadence.
+  * CheckpointCadence -- Young/Daly optimal interval sqrt(2 * MTBF * C)
+    from the observed write cost C and configured/observed MTBF.
+  * run_with_restarts -- supervisor loop: run step fn, on failure restore
+    the last durable checkpoint and replay. Exercised in tests with fault
+    injection (it is the same control flow a pod-failure restart takes).
+  * NaN/overflow step-skip lives in optimizer.apply_updates(skip_update=...)
+    -- a poisoned gradient never reaches the master weights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import statistics
+import time
+from typing import Callable, List, Optional
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    median: float
+
+
+class StepMonitor:
+    def __init__(self, window: int = 50, straggler_factor: float = 2.0):
+        self.window = window
+        self.factor = straggler_factor
+        self.times: List[float] = []
+        self.events: List[StragglerEvent] = []
+        self._t0: Optional[float] = None
+        self.step = 0
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> Optional[StragglerEvent]:
+        assert self._t0 is not None, "stop() without start()"
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        self.step += 1
+        med = statistics.median(self.times)
+        if len(self.times) >= 5 and dt > self.factor * med:
+            ev = StragglerEvent(self.step, dt, med)
+            self.events.append(ev)
+            return ev
+        return None
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self.times) if self.times else 0.0
+
+
+class CheckpointCadence:
+    """Young/Daly: checkpoint every sqrt(2 * MTBF * write_cost) seconds."""
+
+    def __init__(self, mtbf_seconds: float, min_interval_steps: int = 10):
+        self.mtbf = mtbf_seconds
+        self.min_steps = min_interval_steps
+        self.write_cost = 1.0  # updated from observed saves
+        self._last_ckpt_time = time.monotonic()
+
+    def observe_write(self, seconds: float):
+        self.write_cost = 0.5 * self.write_cost + 0.5 * max(seconds, 1e-3)
+
+    @property
+    def interval_seconds(self) -> float:
+        return math.sqrt(2.0 * self.mtbf * self.write_cost)
+
+    def should_checkpoint(self, step: int, step_time: float) -> bool:
+        if step % self.min_steps == 0:
+            return True
+        return (time.monotonic() - self._last_ckpt_time) >= self.interval_seconds
+
+    def mark(self):
+        self._last_ckpt_time = time.monotonic()
+
+
+def run_with_restarts(
+    step_fn: Callable[[int, object], object],
+    restore_fn: Callable[[], tuple],
+    save_fn: Callable[[int, object], None],
+    *,
+    total_steps: int,
+    checkpoint_every: int,
+    max_restarts: int = 3,
+):
+    """Supervisor: drive step_fn with checkpoint/restart on failure.
+
+    restore_fn() -> (start_step, state); step_fn(step, state) -> state;
+    save_fn(step, state). Returns (final_state, n_restarts, telemetry).
+    """
+    restarts = 0
+    monitor = StepMonitor()
+    start_step, state = restore_fn()
+    step = start_step
+    while step < total_steps:
+        try:
+            monitor.start()
+            state = step_fn(step, state)
+            monitor.stop()
+            step += 1
+            if step % checkpoint_every == 0 or step == total_steps:
+                save_fn(step, state)
+        except Exception:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            start_step, state = restore_fn()
+            step = start_step
+    return state, restarts, {"stragglers": monitor.events, "median_step": monitor.median}

@@ -1,0 +1,71 @@
+"""Chunked softmax cross-entropy over a vocab-sharded unembedding.
+
+Materializing (B, S, V) logits for V=262k (gemma3) at 1M tokens/step is
+~0.5 TB -- the classic memory wall. We scan over sequence chunks: each chunk
+computes (B, chunk, V)-sharded logits, its loss contribution, and is freed
+(remat'ed in the backward). This bounds live logits memory by a factor
+S/chunk and is one of the beyond-paper memory optimizations recorded in
+EXPERIMENTS.md Section Perf.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import unembed
+
+
+def _chunk_ce(params_embed, tie, hidden_c, targets_c, mask_c, vocab_valid):
+    logits = unembed(params_embed, hidden_c, tie).astype(jnp.float32)
+    logits = constrain(logits, "batch", None, "vocab")
+    # mask padded vocab entries out of the logsumexp
+    V = logits.shape[-1]
+    if vocab_valid < V:
+        pad_mask = jnp.arange(V) < vocab_valid
+        logits = jnp.where(pad_mask, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets_c[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask_c
+    correct = (jnp.argmax(logits, -1) == targets_c) * mask_c
+    return jnp.sum(nll), jnp.sum(correct)
+
+
+def chunked_cross_entropy(
+    params_embed: dict,
+    tie: bool,
+    hidden: jnp.ndarray,  # (B, S, d)
+    targets: jnp.ndarray,  # (B, S) int32 (padded-vocab ids never appear)
+    *,
+    vocab_valid: int,
+    mask: Optional[jnp.ndarray] = None,  # (B, S) 1.0 = count this position
+    chunk: int = 512,
+) -> Tuple[jnp.ndarray, dict]:
+    B, S, d = hidden.shape
+    # context-parallel archs arrive seq-sharded; the loss chunks over seq, so
+    # reshard to batch-only here (one all-to-all) before the chunk scan.
+    hidden = constrain(hidden, "batch", None, "embed")
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    n = S // chunk if S % chunk == 0 and S > chunk else 1
+    c = S // n
+
+    def body(carry, xs):
+        nll_acc, correct_acc = carry
+        h_c, t_c, m_c = xs
+        nll, correct = _chunk_ce(params_embed, tie, h_c, t_c, m_c, vocab_valid)
+        return (nll_acc + nll, correct_acc + correct), None
+
+    split = lambda t: t.reshape(B, n, c, *t.shape[2:]).swapaxes(0, 1)
+    body_fn = jax.checkpoint(body, prevent_cse=False)
+    (nll, correct), _ = jax.lax.scan(
+        body_fn,
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (split(hidden), split(targets), split(mask)),
+    )
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = nll / denom
+    return loss, {"nll_sum": nll, "tokens": denom, "accuracy": correct / denom}

@@ -1,0 +1,223 @@
+"""Analytic model-FLOPs formulas (the paper's Section 4 accounting).
+
+MODEL_FLOPS for training = 6*N*D tokens (dense) or 6*N_active*D (MoE),
+plus 12*L*H*S^2-style attention FLOPs (the paper's Megatron formula,
+causal halving NOT applied, "for consistency with the literature").
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def param_count(cfg: ModelConfig) -> Tuple[int, int]:
+    """(total_params, active_params_per_token) -- analytic, from config."""
+    d, L, V = cfg.d_model, cfg.num_layers, cfg.padded_vocab
+    kinds = cfg.layer_kinds()
+    total = active = V * d  # embed
+    if not cfg.tie_embeddings:
+        total += V * d
+        active += V * d
+    for kind in kinds:
+        layer_t = layer_a = 0
+        if kind.startswith("attn") or kind.startswith("hybrid"):
+            attn = d * cfg.q_dim * 2 + d * cfg.kv_dim * 2
+            layer_t += attn
+            layer_a += attn
+        if kind in ("mamba", "hybrid", "hybrid_global") and cfg.ssm:
+            s = cfg.ssm
+            din = s.expand * d
+            dtr = s.dt_rank or (d + 15) // 16
+            ssm = (
+                d * 2 * din + s.d_conv * din + din * (dtr + 2 * s.d_state)
+                + dtr * din + din * s.d_state + din * d
+            )
+            layer_t += ssm
+            layer_a += ssm
+        if kind != "mamba":
+            if cfg.moe:
+                m = cfg.moe
+                ffn1 = 3 * d * m.d_expert
+                layer_t += m.num_experts * ffn1 + d * m.num_experts
+                layer_a += m.top_k * ffn1
+            elif cfg.d_ff:
+                ffn = (3 if cfg.mlp == "swiglu" else 2) * d * cfg.d_ff
+                layer_t += ffn
+                layer_a += ffn
+        total += layer_t
+        active += layer_a
+    if cfg.encoder:  # whisper encoder
+        enc = cfg.encoder.num_layers * (4 * d * d + 2 * d * cfg.d_ff)
+        total += enc
+        active += enc
+        # decoder cross-attention
+        total += cfg.num_layers * 4 * d * d
+        active += cfg.num_layers * 4 * d * d
+    return total, active
+
+
+def train_model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6*N_active*D + attention term, per training step (paper Sec. 4.2)."""
+    tokens = shape.global_batch * shape.seq_len
+    _, active = param_count(cfg)
+    flops = 6.0 * active * tokens
+    # attention: 12 * L_attn * d_attn * S^2 per sequence (fwd 4 + bwd 8)
+    s_full = shape.seq_len
+    for kind in cfg.layer_kinds():
+        if kind.startswith("attn") or kind.startswith("hybrid"):
+            w = cfg.kind_window(kind)
+            s_eff = min(w, s_full) if w else s_full
+            flops += 12.0 * cfg.q_dim * s_eff * s_full * shape.global_batch
+    if cfg.encoder:
+        flops += cfg.encoder.num_layers * 12.0 * cfg.q_dim * s_full * s_full * shape.global_batch
+    return flops
+
+
+def prefill_model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    return train_model_flops(cfg, shape) / 3.0  # fwd only (1 of fwd+2x bwd)
+
+
+def decode_model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """One serve_step: 2*N_active matmul FLOPs + attention over the cache."""
+    B = shape.global_batch
+    _, active = param_count(cfg)
+    flops = 2.0 * active * B
+    for kind in cfg.layer_kinds():
+        if kind.startswith("attn") or kind.startswith("hybrid"):
+            w = cfg.kind_window(kind)
+            s_eff = min(w, shape.seq_len) if w else shape.seq_len
+            flops += 4.0 * cfg.q_dim * s_eff * B
+    return flops
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    if shape.kind == "train":
+        return train_model_flops(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_model_flops(cfg, shape)
+    return decode_model_flops(cfg, shape)
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Analytic Pallas-kernel HBM traffic (the kernel-substituted roofline)
+# ---------------------------------------------------------------------------
+#
+# On a real TPU the flash attention region executes as the Pallas kernel
+# (kernels/flash_fwd.py, flash_bwd.py): Q tile + accumulator + (m, l) live
+# in VMEM across the KV loop, so per (arch x shape) the kernel's HBM traffic
+# is exactly the boundary tensors:
+#
+#   fwd:  read Q once, write O + LSE once, stream K/V once per visible
+#         q-row block   (f * t_q * (K + V))
+#   bwd:  dKV kernel -- read K/V + write dK/dV once, stream Q/dO/stats per
+#         kv block; dQ kernel -- read Q/dO + write dQ once, stream K/V per
+#         q block.  (the paper's 5-matmul recompute form, two-kernel TPU
+#         split instead of atomic adds)
+#
+# The dry-run swaps the measured XLA-scan traffic of the tagged 'fa2scan'
+# regions for this analytic traffic to produce the deployment roofline
+# (EXPERIMENTS.md Section Roofline reports both).
+
+
+def _visible_fraction(spec_kind: str, window, sink, t_q: int, t_kv: int,
+                      bq: int, bk: int, q_offset: int = 0) -> float:
+    from repro.core.masks import MaskSpec, tile_visibility
+
+    spec = MaskSpec(
+        causal=spec_kind == "causal" or (spec_kind == "window" and True),
+        window=window if spec_kind == "window" else None,
+        sink=sink,
+    )
+    if spec.is_trivial:
+        return 1.0
+    vis = 0
+    for i in range(t_q):
+        q_lo = i * bq + q_offset
+        for j in range(t_kv):
+            if tile_visibility(spec, q_lo, q_lo + bq, j * bk, j * bk + bk) != "empty":
+                vis += 1
+    return vis / max(t_q * t_kv, 1)
+
+
+def flash_kernel_bytes(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    *,
+    block_q: int = 1024,
+    block_kv: int = 1024,
+    multi_pod: bool = False,
+    model_axis: int = 16,
+    data_axis: int = 16,
+) -> float:
+    """Per-chip HBM bytes of all flash-attention kernel invocations in one
+    step of this cell (train: fwd + remat-fwd + bwd; prefill: fwd).
+    Mirrors the sharding rules of distributed.sharding.lm_rules."""
+    if shape.kind == "decode":
+        return 0.0  # decode uses flash_decode; not substituted
+    chips_data = data_axis * (2 if multi_pod else 1)
+    B_l = max(shape.global_batch // chips_data, 1)
+    seqsh = cfg.attn_sharding == "sequence"
+    S = shape.seq_len
+    D = cfg.head_dim
+    dt = 2  # bf16
+    if seqsh:
+        S_q = max(S // model_axis, 1)
+        Hq_l, Hkv_l = cfg.num_heads, cfg.num_kv_heads
+    else:
+        S_q = S
+        Hq_l = cfg.num_heads // model_axis if cfg.num_heads % model_axis == 0 else cfg.num_heads
+        # GQA expansion (models/attention_layer._expand_gqa_for_sharding):
+        # each chip streams exactly its own q heads' (duplicated) kv heads.
+        Hkv_l = Hq_l
+
+    def attn_bytes(s_q, s_kv, hq, hkv, kind_spec, window, sink, train: bool):
+        bq = min(block_q, s_q)
+        bk = min(block_kv, s_kv)
+        t_q = -(-s_q // bq)
+        t_kv = -(-s_kv // bk)
+        f = _visible_fraction(kind_spec, window, sink, t_q, t_kv, bq, bk)
+        q_b = B_l * s_q * hq * D * dt
+        o_b = q_b
+        lse_b = B_l * hq * s_q * 4
+        k_b = B_l * s_kv * hkv * D * dt
+        fwd = q_b + o_b + lse_b + f * t_q * 2 * k_b
+        if not train:
+            return fwd
+        # dKV kernel + dQ kernel (Algorithm 2, two-kernel TPU split)
+        bwd = (
+            2 * k_b + 2 * k_b  # read K,V; write dK,dV
+            + f * t_kv * (2 * q_b + 2 * lse_b)  # stream Q,dO + (lse, delta)
+            + 2 * q_b + q_b  # read Q,dO; write dQ
+            + f * t_q * 2 * k_b  # stream K,V
+        )
+        # remat: the fwd runs again inside the backward
+        return 2 * fwd + bwd
+
+    train = shape.kind == "train"
+    total = 0.0
+    for kind in cfg.layer_kinds():
+        if kind == "mamba":
+            continue
+        window = cfg.kind_window(kind)
+        sink = cfg.meta_tokens if (window is not None and cfg.meta_tokens) else 0
+        spec_kind = "window" if window is not None else "causal"
+        total += attn_bytes(S_q, S, Hq_l, Hkv_l, spec_kind, window, sink, train)
+    if cfg.encoder:  # whisper: encoder self-attn (full) + decoder cross-attn
+        frames = S  # dry-run uses seq_len frames for train/prefill
+        fr_q = max(frames // model_axis, 1) if seqsh else frames
+        total += cfg.encoder.num_layers * attn_bytes(
+            fr_q, frames, Hq_l, Hkv_l, "full", None, 0, train
+        )
+        total += cfg.num_layers * attn_bytes(
+            S_q, frames, Hq_l, Hkv_l, "full", None, 0, train
+        )
+    return total

@@ -1,0 +1,42 @@
+"""Recompute the roofline block of stored dry-run JSONs from their raw
+terms (flops / hbm_bytes / coll_bytes / chips / model_flops).
+
+Used after any change to utils.hlo_analysis.Roofline so the stored
+experiments stay consistent with the code without re-lowering 80 cells.
+
+Usage: python -m repro.utils.recompute_roofline experiments/dryrun_*.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.utils.hlo_analysis import Roofline
+
+
+def recompute(path: str) -> int:
+    with open(path) as f:
+        data = json.load(f)
+    n = 0
+    for rec in data.values():
+        rl = rec.get("roofline")
+        if not rl:
+            continue
+        new = Roofline(
+            flops=rl["flops"],
+            hbm_bytes=rl["hbm_bytes"],
+            coll_bytes=rl["coll_bytes"],
+            chips=rl["chips"],
+            model_flops=rl.get("model_flops"),
+        )
+        rec["roofline"] = new.to_dict()
+        n += 1
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+    return n
+
+
+if __name__ == "__main__":
+    for p in sys.argv[1:]:
+        print(f"{p}: recomputed {recompute(p)} roofline blocks")

@@ -1,0 +1,23 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here by design -- smoke tests
+and benches must see 1 device; multi-device tests spawn subprocesses."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def assert_allclose(a, b, atol=1e-5, rtol=1e-5, msg=""):
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32), atol=atol, rtol=rtol,
+        err_msg=msg,
+    )
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype)

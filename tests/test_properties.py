@@ -1,0 +1,124 @@
+"""Hypothesis property tests on the system's core invariants.
+
+P1  online-softmax combine is associative + commutative (the correctness
+    basis of the KV-loop, split-KV decode, AND context parallelism).
+P2  combine_lse_outputs merges locally-normalized parts exactly.
+P3  causal attention output is independent of future K/V rows.
+P4  GQA flash == explicitly-expanded MHA.
+P5  flash(q,k,v) rows are convex combinations of V rows (weights sum to 1).
+P6  softmax shift invariance: adding a constant to all scores of a row
+    leaves attention unchanged (flash must inherit this).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import online_softmax as osm
+from repro.core.flash import flash_attention, flash_attention_with_lse
+from repro.core.masks import MaskSpec
+from repro.kernels.ref import attention_reference
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _rand(seed, *shape):
+    return np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+
+
+@given(seed=st.integers(0, 2**16), rows=st.integers(1, 8), cols=st.integers(1, 16), d=st.integers(1, 8))
+@settings(**SETTINGS)
+def test_p1_combine_associative_commutative(seed, rows, cols, d):
+    s = _rand(seed, 3, rows, cols) * 4
+    v = _rand(seed + 1, 3, cols, d)
+    states = [osm.block_state(jnp.asarray(s[i]), jnp.asarray(v[i])) for i in range(3)]
+    ab_c = osm.combine(osm.combine(states[0], states[1]), states[2])
+    a_bc = osm.combine(states[0], osm.combine(states[1], states[2]))
+    ba_c = osm.combine(osm.combine(states[1], states[0]), states[2])
+    for x, y in ((ab_c, a_bc), (ab_c, ba_c)):
+        np.testing.assert_allclose(x.m, y.m, atol=1e-6)
+        np.testing.assert_allclose(x.l, y.l, rtol=1e-5)
+        np.testing.assert_allclose(x.o, y.o, rtol=1e-4, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**16), parts=st.integers(1, 6))
+@settings(**SETTINGS)
+def test_p2_split_merge_exact(seed, parts):
+    rows, cols, d = 4, 8, 5
+    s = _rand(seed, parts, rows, cols) * 3
+    v = _rand(seed + 1, parts, cols, d)
+    o_parts, lse_parts = [], []
+    for i in range(parts):
+        o_i, lse_i = osm.finalize(osm.block_state(jnp.asarray(s[i]), jnp.asarray(v[i])))
+        o_parts.append(o_i)
+        lse_parts.append(lse_i)
+    o, lse = osm.combine_lse_outputs(jnp.stack(o_parts), jnp.stack(lse_parts))
+    s_cat = jnp.concatenate([jnp.asarray(x) for x in s], axis=-1)
+    v_cat = jnp.concatenate([jnp.asarray(x) for x in v], axis=0)
+    o_ref, lse_ref = osm.finalize(osm.block_state(s_cat, v_cat))
+    np.testing.assert_allclose(o, o_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(lse, lse_ref, rtol=1e-5, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_p3_causal_future_independence(seed):
+    B, S, H, D = 1, 64, 2, 16
+    rng = np.random.default_rng(seed)
+    q, k, v = (rng.standard_normal((B, S, H, D)).astype(np.float32) for _ in range(3))
+    cut = int(rng.integers(1, S))
+    o1 = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                         MaskSpec(causal=True), block_q=16, block_kv=16)
+    k2, v2 = k.copy(), v.copy()
+    k2[:, cut:] = rng.standard_normal(k2[:, cut:].shape)  # perturb the future
+    v2[:, cut:] = rng.standard_normal(v2[:, cut:].shape)
+    o2 = flash_attention(jnp.asarray(q), jnp.asarray(k2), jnp.asarray(v2),
+                         MaskSpec(causal=True), block_q=16, block_kv=16)
+    np.testing.assert_allclose(o1[:, :cut], o2[:, :cut], atol=1e-5, rtol=1e-5)
+
+
+@given(seed=st.integers(0, 2**16), g=st.sampled_from([1, 2, 4]))
+@settings(**SETTINGS)
+def test_p4_gqa_equals_expanded_mha(seed, g):
+    B, S, Hk, D = 1, 32, 2, 8
+    Hq = Hk * g
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, S, Hq, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, Hk, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, Hk, D)).astype(np.float32))
+    spec = MaskSpec(causal=True)
+    o_gqa = flash_attention(q, k, v, spec, block_q=16, block_kv=16)
+    k_exp = jnp.repeat(k, g, axis=2)
+    v_exp = jnp.repeat(v, g, axis=2)
+    o_mha = flash_attention(q, k_exp, v_exp, spec, block_q=16, block_kv=16)
+    np.testing.assert_allclose(o_gqa, o_mha, atol=1e-5, rtol=1e-5)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_p5_convex_combination(seed):
+    B, S, H, D = 1, 32, 2, 8
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)).astype(np.float32))
+    v_const = jnp.ones((B, S, H, D), jnp.float32) * 3.7  # constant V rows
+    o = flash_attention(q, k, v_const, MaskSpec(causal=True), block_q=16, block_kv=16)
+    np.testing.assert_allclose(o, 3.7, atol=1e-5)  # weights sum to exactly 1
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_p6_kv_permutation_invariance(seed):
+    """Non-causal attention is permutation-invariant in the KV rows: the
+    online-softmax accumulation order cannot matter (this is what makes the
+    packed tile schedule and context-parallel KV rotation exact)."""
+    B, Sq, Sk, H, D = 1, 16, 48, 2, 8
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, D)).astype(np.float32))
+    k = rng.standard_normal((B, Sk, H, D)).astype(np.float32)
+    v = rng.standard_normal((B, Sk, H, D)).astype(np.float32)
+    perm = rng.permutation(Sk)
+    o1 = flash_attention(q, jnp.asarray(k), jnp.asarray(v), MaskSpec(), block_q=16, block_kv=16)
+    o2 = flash_attention(q, jnp.asarray(k[:, perm]), jnp.asarray(v[:, perm]), MaskSpec(), block_q=16, block_kv=16)
+    np.testing.assert_allclose(o1, o2, atol=2e-5, rtol=1e-4)
