@@ -31,6 +31,8 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--attn", default="flash_xla")
+    ap.add_argument("--packed", action="store_true",
+                    help="train on varlen packed batches (segment-masked attention)")
     args = ap.parse_args()
 
     cfg = PRESETS[args.preset]
@@ -38,6 +40,7 @@ def main():
         loop = TrainLoopConfig(
             steps=args.steps, seq_len=args.seq, batch_size=args.batch,
             attn_impl=args.attn, ckpt_dir=ckpt_dir, ckpt_every=max(args.steps // 3, 10),
+            packed=args.packed,
         )
         _, _, hist = train(cfg, loop, AdamWConfig(lr=1e-3, warmup_steps=20,
                                                   total_steps=args.steps))

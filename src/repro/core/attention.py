@@ -40,17 +40,30 @@ def attention(
     cfg: AttentionConfig = AttentionConfig(),
     *,
     scale: Optional[float] = None,
+    segment_ids: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
-    """Differentiable attention. q (B,Sq,Hq,D); k/v (B,Skv,Hkv,D) GQA."""
+    """Differentiable attention. q (B,Sq,Hq,D); k/v (B,Skv,Hkv,D) GQA.
+
+    segment_ids (B, S) int32 enables packed varlen semantics on every
+    backend (self-attention over one packed layout: q and kv share ids).
+    """
     if cfg.impl == "ref":
         from repro.kernels.ref import attention_reference
 
-        return attention_reference(q, k, v, spec, scale=scale)[0]
+        return attention_reference(q, k, v, spec, scale=scale, segment_ids=segment_ids)[0]
     if cfg.impl == "flash_xla":
         return _flash.flash_attention(
-            q, k, v, spec, scale=scale, block_q=cfg.block_q, block_kv=cfg.block_kv, mode=cfg.mode
+            q, k, v, spec, scale=scale, block_q=cfg.block_q, block_kv=cfg.block_kv,
+            mode=cfg.mode, segment_ids=segment_ids,
         )
     if cfg.impl == "flash_pallas":
+        if segment_ids is not None:
+            from repro.kernels.ops import flash_attention_pallas_varlen
+
+            return flash_attention_pallas_varlen(
+                q, k, v, segment_ids, spec, scale=scale, block_q=cfg.block_q,
+                block_kv=cfg.block_kv, interpret=cfg.interpret,
+            )
         from repro.kernels.ops import flash_attention_pallas
 
         return flash_attention_pallas(
@@ -70,16 +83,24 @@ def decode_attention(
     window: Optional[int] = None,
     sink: int = 0,
     scale: Optional[float] = None,
+    kv_segment_ids: Optional[jnp.ndarray] = None,
+    q_segment: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
-    """Single-token decode against a padded KV cache. Returns (B,1,Hq,D)."""
+    """Single-token decode against a padded KV cache. Returns (B,1,Hq,D).
+
+    kv_segment_ids (B, S) + q_segment (B,) restrict the query to its own
+    segment of a packed cache (see flash_decode / flash_decode_pallas).
+    """
     if cfg.impl == "flash_pallas":
         from repro.kernels.ops import flash_decode_pallas
 
         return flash_decode_pallas(
             q, k_cache, v_cache, cache_length, window=window, sink=sink, scale=scale,
-            num_splits=cfg.decode_splits, interpret=cfg.interpret,
+            num_splits=cfg.decode_splits, kv_segment_ids=kv_segment_ids,
+            q_segment=q_segment, interpret=cfg.interpret,
         )[0]
     return _decode.flash_decode(
         q, k_cache, v_cache, cache_length, window=window, sink=sink, scale=scale,
-        num_splits=cfg.decode_splits,
+        num_splits=cfg.decode_splits, kv_segment_ids=kv_segment_ids,
+        q_segment=q_segment,
     )[0]

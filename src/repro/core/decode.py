@@ -32,12 +32,20 @@ def flash_decode(
     sink: int = 0,
     scale: Optional[float] = None,
     num_splits: int = 8,
+    kv_segment_ids: Optional[jnp.ndarray] = None,  # (B, S) int32
+    q_segment: Optional[jnp.ndarray] = None,  # (B,) int32
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Exact attention of one query against a (padded) KV cache.
 
     The query attends to cache positions [max(0, L - window), L) where
     L = cache_length[b] (the query sits at position L - 1 *after* the new
     token's KV has been appended -- append before calling).
+
+    kv_segment_ids/q_segment restrict attention to the query's own segment
+    in a *packed* cache (several sequences back-to-back in one cache row):
+    only positions with kv_segment_ids[b, j] == q_segment[b] are visible.
+    The window (if any) still counts global tail positions, which matches
+    the packed-decode case of generating into the trailing segment.
 
     Returns (o (B, 1, Hq, D), lse (B, Hq, 1)).
     """
@@ -60,6 +68,10 @@ def flash_decode(
     s = jnp.einsum("bhgd,bhcsd->bhgcs", qf, kc.astype(qf.dtype))
     pos = jnp.arange(S, dtype=jnp.int32).reshape(ns, sc)
     valid = pos[None] < cache_length[:, None, None]  # (B, ns, sc)
+    if kv_segment_ids is not None:
+        assert q_segment is not None, "packed decode needs the query's segment id"
+        same_seg = kv_segment_ids.reshape(B, ns, sc) == q_segment[:, None, None]
+        valid = valid & same_seg
     if window is not None:
         in_win = pos[None] >= (cache_length[:, None, None] - window)
         if sink:

@@ -37,7 +37,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.masks import DEFAULT_MASK_VALUE, MaskSpec, make_tile_mask, tile_visibility
+from repro.core.masks import (
+    DEFAULT_MASK_VALUE,
+    MaskSpec,
+    SegmentInfo,
+    make_segment_mask,
+    make_tile_mask,
+    pad_segments,
+    segment_tile_visibility,
+    tile_visibility,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,15 +81,40 @@ def _pad_axis(x: jnp.ndarray, axis: int, block: int) -> Tuple[jnp.ndarray, int]:
     return x, pad
 
 
-def _visible_pairs(spec: MaskSpec, t_q: int, t_kv: int, bq: int, bk: int):
-    """Static (i, j) tile pairs that are not fully masked (row-major)."""
+def _visible_pairs(
+    spec: MaskSpec, t_q: int, t_kv: int, bq: int, bk: int, segments=None
+):
+    """Static (i, j) tile pairs that are not fully masked (row-major).
+
+    segments: optional concrete (numpy) segment ids -- either a single
+    (Sq,) vector (packed self-attention) or a (q_segs, kv_segs) pair. A
+    tile whose every (q, kv) pair crosses a segment boundary is dropped in
+    addition to the MaskSpec-empty tiles: this is the accounting mirror of
+    the kernels' dynamic cross-segment skip (FA2 Sec 3.1 generalized), so
+    a packed batch costs the sum of its per-segment visible tiles rather
+    than B x S^2.
+    """
+    q_segs = kv_segs = None
+    if segments is not None:
+        if isinstance(segments, tuple):
+            q_segs, kv_segs = np.asarray(segments[0]), np.asarray(segments[1])
+        else:
+            q_segs = kv_segs = np.asarray(segments)
     ii, jj = [], []
     for i in range(t_q):
         q_lo = i * bq + spec.q_offset
         for j in range(t_kv):
-            if tile_visibility(spec, q_lo, q_lo + bq, j * bk, j * bk + bk) != "empty":
-                ii.append(i)
-                jj.append(j)
+            if tile_visibility(spec, q_lo, q_lo + bq, j * bk, j * bk + bk) == "empty":
+                continue
+            if q_segs is not None:
+                # segment positions are layout-local (no q_offset)
+                svis = segment_tile_visibility(
+                    q_segs, kv_segs, i * bq, i * bq + bq, j * bk, j * bk + bk
+                )
+                if svis == "empty":
+                    continue
+            ii.append(i)
+            jj.append(j)
     return np.asarray(ii, np.int32), np.asarray(jj, np.int32)
 
 
@@ -143,6 +177,18 @@ def _blocked(q, k, v, cfg: FlashConfig):
     )
 
 
+def _blocked_segments(q_seg, kv_seg, bl):
+    """Pad (B, Sq)/(B, Sk) int32 segment ids to the blocked lengths with
+    the repo-wide sentinels (masks.pad_segments)."""
+    return pad_segments(q_seg, kv_seg, bl["q"].shape[3], bl["k"].shape[2])
+
+
+def _seg_tile_mask(q_segs, kv_segs):
+    """(B, X) x (B, Y) -> (B, 1, 1, X, Y) same-segment mask (broadcasts
+    over the (Hk, G) head dims of a score tile)."""
+    return make_segment_mask(q_segs, kv_segs)[:, None, None]
+
+
 def _tile_scores(q_blk, k_blk):
     # (B, H, G, bq, D) x (B, H, bk, D) -> (B, H, G, bq, bk), fp32 accumulation.
     return jnp.einsum("bhgqd,bhkd->bhgqk", q_blk, k_blk, preferred_element_type=jnp.float32)
@@ -189,13 +235,17 @@ def _finalize(m, l, acc):
 # ---------------------------------------------------------------------------
 
 
-def _fwd(q, k, v, cfg: FlashConfig):
+def _fwd(q, k, v, cfg: FlashConfig, q_seg=None, kv_seg=None):
     bl = _blocked(q, k, v, cfg)
-    mode = cfg.resolve_mode(bl["t_q"], bl["t_kv"])
-    if mode == "packed":
-        o, lse = _fwd_packed(bl, cfg)
+    segs = None if q_seg is None else _blocked_segments(q_seg, kv_seg, bl)
+    if cfg.resolve_mode(bl["t_q"], bl["t_kv"]) == "packed":
+        # Segments compose with the static spec-only tile skip: the skip is
+        # data-independent (a sound superset of the segment-visible tiles),
+        # the traced segment mask is applied element-wise per kept tile --
+        # exactly the Pallas kernels' structure.
+        o, lse = _fwd_packed(bl, cfg, segs)
     else:
-        o, lse = _fwd_dense(bl, cfg)
+        o, lse = _fwd_dense(bl, cfg, segs)
     # Back to (B, Sq, Hq, D) / (B, Hq, Sq).
     B, Hk, G, Sq, Hq, D = bl["B"], bl["Hk"], bl["G"], bl["Sq"], bl["Hq"], bl["D"]
     o = o[:, :, :, :Sq].transpose(0, 3, 1, 2, 4)
@@ -204,40 +254,47 @@ def _fwd(q, k, v, cfg: FlashConfig):
     return o, lse
 
 
-def _fwd_dense(bl, cfg: FlashConfig):
+def _fwd_dense(bl, cfg: FlashConfig, segs=None):
     B, Hk, G, Sqp, D = bl["q"].shape
     bq, bk, t_kv = bl["bq"], bl["bk"], bl["t_kv"]
     p_dtype = bl["v"].dtype
     k_blocks = bl["k"].reshape(B, Hk, t_kv, bk, D).transpose(2, 0, 1, 3, 4)
     v_blocks = bl["v"].reshape(B, Hk, t_kv, bk, D).transpose(2, 0, 1, 3, 4)
     spec = cfg.spec
+    q_segs, kv_segs = segs if segs is not None else (None, None)
+    kv_seg_blocks = (
+        None if kv_segs is None
+        else kv_segs.reshape(B, t_kv, bk).transpose(1, 0, 2)  # (t_kv, B, bk)
+    )
 
     q_all = bl["q"]  # (B, Hk, G, Sqp, D)
     q_ids = jnp.arange(Sqp, dtype=jnp.int32) + spec.q_offset
 
     def body(carry, xs):
         m, l, acc = carry
-        k_j, v_j, j = xs
+        k_j, v_j, kv_seg_j, j = xs
         s = _tile_scores(q_all, k_j)
         kv_ids = j * bk + jnp.arange(bk, dtype=jnp.int32)
         mask = make_tile_mask(spec, q_ids, kv_ids)
         if bl["pad_k"]:
             ok = kv_ids < bl["Sk"]
             mask = ok[None, :] if mask is None else (mask & ok[None, :])
+        if kv_seg_j is not None:
+            seg = _seg_tile_mask(q_segs, kv_seg_j)  # (B, 1, 1, Sqp, bk)
+            mask = seg if mask is None else (mask & seg)
         m, l, acc = _update(m, l, acc, s, v_j, mask, p_dtype)
         return (m, l, acc), None
 
     m0 = jnp.full((B, Hk, G, Sqp), -jnp.inf, jnp.float32)
     l0 = jnp.zeros((B, Hk, G, Sqp), jnp.float32)
     a0 = jnp.zeros((B, Hk, G, Sqp, D), jnp.float32)
+    xs = (k_blocks, v_blocks, kv_seg_blocks, jnp.arange(t_kv, dtype=jnp.int32))
     with jax.named_scope("fa2scan"):  # tagged: kernel-substituted roofline
-        (m, l, acc), _ = jax.lax.scan(
-            body, (m0, l0, a0), (k_blocks, v_blocks, jnp.arange(t_kv, dtype=jnp.int32))
-        )
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs)
     return _finalize(m, l, acc)
 
 
-def _fwd_packed(bl, cfg: FlashConfig):
+def _fwd_packed(bl, cfg: FlashConfig, segs=None):
     """Triangular tile packing: scans over visible (i, j) tile pairs.
 
     The carried state holds (m, l, acc) for *every* q block -- O(N d) memory,
@@ -250,12 +307,26 @@ def _fwd_packed(bl, cfg: FlashConfig):
     mask is built or applied, saving one S-tile-sized select per step) run
     first, then boundary tiles with the mask. Online-softmax combining is
     order-independent, so the split does not change the result.
+
+    segs: optional blocked (q_segs (B, Sqp), kv_segs (B, Skp)) -- the
+    spec-only tile skip stays sound (it is data-independent), but every
+    kept tile needs the traced segment element mask, so all tiles run
+    through the masked scan.
     """
     B, Hk, G, Sqp, D = bl["q"].shape
     bq, bk, t_q, t_kv = bl["bq"], bl["bk"], bl["t_q"], bl["t_kv"]
     p_dtype = bl["v"].dtype
     spec = cfg.spec
-    (ii_f, jj_f), (ii_p, jj_p) = _classified_pairs(spec, t_q, t_kv, bq, bk, bl["Sk"])
+    q_segs, kv_segs = segs if segs is not None else (None, None)
+    if segs is None:
+        (ii_f, jj_f), (ii_p, jj_p) = _classified_pairs(spec, t_q, t_kv, bq, bk, bl["Sk"])
+        q_seg_blocks = kv_seg_blocks = None
+    else:
+        # a spec-`full` tile may still cross segments -> everything masked
+        ii_p, jj_p = _visible_pairs(spec, t_q, t_kv, bq, bk)
+        ii_f = jj_f = np.asarray([], np.int32)
+        q_seg_blocks = q_segs.reshape(B, t_q, bq).transpose(1, 0, 2)
+        kv_seg_blocks = kv_segs.reshape(B, t_kv, bk).transpose(1, 0, 2)
 
     q_blocks = bl["q"].reshape(B, Hk, G, t_q, bq, D).transpose(3, 0, 1, 2, 4, 5)
     k_blocks = bl["k"].reshape(B, Hk, t_kv, bk, D).transpose(2, 0, 1, 3, 4)
@@ -272,6 +343,11 @@ def _fwd_packed(bl, cfg: FlashConfig):
             mask = (
                 _tile_mask_bias(spec, i, j, bq, bk, Sqp, bl["Sk"]) if masked else None
             )
+            if masked and q_seg_blocks is not None:
+                qs_i = jax.lax.dynamic_index_in_dim(q_seg_blocks, i, 0, keepdims=False)
+                ks_j = jax.lax.dynamic_index_in_dim(kv_seg_blocks, j, 0, keepdims=False)
+                seg = _seg_tile_mask(qs_i, ks_j)  # (B, 1, 1, bq, bk)
+                mask = seg if mask is None else (mask & seg)
             m_i = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
             l_i = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
             a_i = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
@@ -310,7 +386,7 @@ def _fwd_packed(bl, cfg: FlashConfig):
 # ---------------------------------------------------------------------------
 
 
-def _bwd_dense_unblocked(bl, q, k, v, o, lse, do, cfg: FlashConfig):
+def _bwd_dense_unblocked(bl, q, k, v, o, lse, do, cfg: FlashConfig, segs=None):
     """Algorithm 2 with the KV loop outer and Q whole (context-parallel
     friendly). Same 5 matmuls per block; dQ accumulates in a carried fp32
     buffer (the TPU adaptation of the paper's atomic-add dQ)."""
@@ -319,6 +395,11 @@ def _bwd_dense_unblocked(bl, q, k, v, o, lse, do, cfg: FlashConfig):
     Sq, Sk, scale = bl["Sq"], bl["Sk"], bl["scale"]
     spec = cfg.spec
     in_dtype = q.dtype
+    q_segs, kv_segs = segs if segs is not None else (None, None)
+    kv_seg_blocks = (
+        None if kv_segs is None
+        else kv_segs.reshape(B, t_kv, bk).transpose(1, 0, 2)  # (t_kv, B, bk)
+    )
 
     def to_bhgs(x, Hn):  # (B, S, H, D) -> (B, Hk, G, Sqp, D) fp32
         _, S, _, _ = x.shape
@@ -339,13 +420,16 @@ def _bwd_dense_unblocked(bl, q, k, v, o, lse, do, cfg: FlashConfig):
     q_ids = jnp.arange(Sqp, dtype=jnp.int32) + spec.q_offset
 
     def body(dq, xs):
-        k_j, v_j, j = xs
+        k_j, v_j, kv_seg_j, j = xs
         s = _tile_scores(q_all, k_j)
         kv_ids = j * bk + jnp.arange(bk, dtype=jnp.int32)
         mask = make_tile_mask(spec, q_ids, kv_ids)
         if bl["pad_k"]:
             ok = kv_ids < Sk
             mask = ok[None, :] if mask is None else (mask & ok[None, :])
+        if kv_seg_j is not None:
+            seg = _seg_tile_mask(q_segs, kv_seg_j)
+            mask = seg if mask is None else (mask & seg)
         if mask is not None:
             s = jnp.where(mask, s, DEFAULT_MASK_VALUE)
         p = jnp.exp(s - lse_b[..., None])  # line 11: recompute from LSE only
@@ -361,10 +445,9 @@ def _bwd_dense_unblocked(bl, q, k, v, o, lse, do, cfg: FlashConfig):
         return dq, (dk_j, dv_j)
 
     dq0 = jnp.zeros((B, Hk, G, Sqp, D), jnp.float32)
+    xs = (k_blocks, v_blocks, kv_seg_blocks, jnp.arange(t_kv, dtype=jnp.int32))
     with jax.named_scope("fa2scan"):  # tagged: kernel-substituted roofline
-        dq, (dk, dv) = jax.lax.scan(
-            body, dq0, (k_blocks, v_blocks, jnp.arange(t_kv, dtype=jnp.int32))
-        )
+        dq, (dk, dv) = jax.lax.scan(body, dq0, xs)
 
     dq = dq[:, :, :, :Sq].transpose(0, 3, 1, 2, 4)
     dq = dq.reshape(B, Sq, bl["Hq"], D) * scale
@@ -375,13 +458,14 @@ def _bwd_dense_unblocked(bl, q, k, v, o, lse, do, cfg: FlashConfig):
     return dq.astype(q.dtype), from_kv(dk).astype(k.dtype), from_kv(dv).astype(v.dtype)
 
 
-def _bwd_impl(q, k, v, o, lse, do, cfg: FlashConfig):
+def _bwd_impl(q, k, v, o, lse, do, cfg: FlashConfig, q_seg=None, kv_seg=None):
     bl = _blocked(q, k, v, cfg)  # note: bl['q'] is pre-scaled by `scale`
     B, Hk, G, Sqp, D = bl["q"].shape
     bq, bk, t_q, t_kv = bl["bq"], bl["bk"], bl["t_q"], bl["t_kv"]
     Sq, Sk, scale = bl["Sq"], bl["Sk"], bl["scale"]
     spec = cfg.spec
 
+    segs = None if q_seg is None else _blocked_segments(q_seg, kv_seg, bl)
     mode = cfg.resolve_mode(t_q, t_kv)
     if mode != "packed":
         # Dense backward keeps Q *unblocked*: one scan over KV blocks, dQ
@@ -390,8 +474,17 @@ def _bwd_impl(q, k, v, o, lse, do, cfg: FlashConfig):
         # so under context parallelism XLA SPMD keeps every tensor sharded
         # (the blocked formulation forced a full f32 all-gather of q_blocks
         # on every tile step -- see EXPERIMENTS.md Section Perf, deepseek).
-        return _bwd_dense_unblocked(bl, q, k, v, o, lse, do, cfg)
-    (ii_f, jj_f), (ii_p, jj_p) = _classified_pairs(spec, t_q, t_kv, bq, bk, Sk)
+        return _bwd_dense_unblocked(bl, q, k, v, o, lse, do, cfg, segs)
+    if segs is None:
+        (ii_f, jj_f), (ii_p, jj_p) = _classified_pairs(spec, t_q, t_kv, bq, bk, Sk)
+        q_seg_blocks = kv_seg_blocks = None
+    else:
+        # spec-only skip is a sound superset; every kept tile gets the
+        # traced segment element mask (see _fwd_packed).
+        ii_p, jj_p = _visible_pairs(spec, t_q, t_kv, bq, bk)
+        ii_f = jj_f = np.asarray([], np.int32)
+        q_seg_blocks = segs[0].reshape(B, t_q, bq).transpose(1, 0, 2)
+        kv_seg_blocks = segs[1].reshape(B, t_kv, bk).transpose(1, 0, 2)
 
     def to_bhgs(x, Hn):  # (B, S, H, D) -> (B, Hk, G, Sqp, D)
         _, S, _, _ = x.shape
@@ -429,6 +522,11 @@ def _bwd_impl(q, k, v, o, lse, do, cfg: FlashConfig):
             s = _tile_scores(q_i, k_j)  # q pre-scaled -> s is scaled scores
             if masked:
                 mask = _tile_mask_bias(spec, i, j, bq, bk, Sqp, Sk)
+                if q_seg_blocks is not None:
+                    qs_i = jax.lax.dynamic_index_in_dim(q_seg_blocks, i, 0, keepdims=False)
+                    ks_j = jax.lax.dynamic_index_in_dim(kv_seg_blocks, j, 0, keepdims=False)
+                    seg = _seg_tile_mask(qs_i, ks_j)  # (B, 1, 1, bq, bk)
+                    mask = seg if mask is None else (mask & seg)
                 if mask is not None:
                     s = jnp.where(mask, s, DEFAULT_MASK_VALUE)
             p = jnp.exp(s - lse_i[..., None])  # line 11: recompute from LSE only
@@ -510,6 +608,25 @@ def _flash_vjp_bwd(cfg: FlashConfig, res, do):
 _flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _flash_varlen(q, k, v, q_seg, kv_seg, cfg: FlashConfig):
+    return _fwd(q, k, v, cfg, q_seg, kv_seg)[0]
+
+
+def _flash_varlen_vjp_fwd(q, k, v, q_seg, kv_seg, cfg: FlashConfig):
+    o, lse = _fwd(q, k, v, cfg, q_seg, kv_seg)
+    return o, (q, k, v, q_seg, kv_seg, o, lse)
+
+
+def _flash_varlen_vjp_bwd(cfg: FlashConfig, res, do):
+    q, k, v, q_seg, kv_seg, o, lse = res
+    dq, dk, dv = _bwd_impl(q, k, v, o, lse, do, cfg, q_seg, kv_seg)
+    return dq, dk, dv, None, None  # integer segment ids carry no gradient
+
+
+_flash_varlen.defvjp(_flash_varlen_vjp_fwd, _flash_varlen_vjp_bwd)
+
+
 def flash_attention(
     q: jnp.ndarray,
     k: jnp.ndarray,
@@ -520,16 +637,38 @@ def flash_attention(
     block_q: int = 512,
     block_kv: int = 512,
     mode: str = "auto",
+    segment_ids: Optional[jnp.ndarray] = None,
+    kv_segment_ids: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
-    """Differentiable FlashAttention-2 (XLA path). q (B,Sq,Hq,D); k/v GQA."""
+    """Differentiable FlashAttention-2 (XLA path). q (B,Sq,Hq,D); k/v GQA.
+
+    segment_ids (B, Sq) int32 (or a SegmentInfo) enables packed varlen
+    semantics (query i sees key j only within its segment);
+    kv_segment_ids defaults to segment_ids.
+    """
     cfg = FlashConfig(spec=spec, block_q=block_q, block_kv=block_kv, mode=mode, scale=scale)
-    return _flash(q, k, v, cfg)
+    if segment_ids is None:
+        return _flash(q, k, v, cfg)
+    if isinstance(segment_ids, SegmentInfo):
+        segment_ids, kv_segment_ids = segment_ids.q, segment_ids.kv
+    if kv_segment_ids is None:
+        kv_segment_ids = segment_ids
+    return _flash_varlen(
+        q, k, v, segment_ids.astype(jnp.int32), kv_segment_ids.astype(jnp.int32), cfg
+    )
 
 
 def flash_attention_with_lse(
     q, k, v, spec: MaskSpec = MaskSpec(causal=True), *, scale=None,
     block_q: int = 512, block_kv: int = 512, mode: str = "auto",
+    segment_ids=None, kv_segment_ids=None,
 ):
     """Forward-only (serving / context-parallel): returns (o, lse)."""
     cfg = FlashConfig(spec=spec, block_q=block_q, block_kv=block_kv, mode=mode, scale=scale)
-    return _fwd(q, k, v, cfg)
+    if segment_ids is None:
+        return _fwd(q, k, v, cfg)
+    if kv_segment_ids is None:
+        kv_segment_ids = segment_ids
+    return _fwd(
+        q, k, v, cfg, segment_ids.astype(jnp.int32), kv_segment_ids.astype(jnp.int32)
+    )

@@ -13,8 +13,9 @@ FlashAttention-2 works block-by-block; masks are therefore described
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import NamedTuple, Optional
 
+import jax
 import jax.numpy as jnp
 
 NEG_INF = float("-inf")
@@ -61,6 +62,108 @@ FULL = MaskSpec(causal=False)
 CAUSAL = MaskSpec(causal=True)
 
 
+class SegmentInfo(NamedTuple):
+    """Per-token segment ids for packed (varlen) attention.
+
+    A batch row holds several back-to-back sequences ("segments"); query i
+    may only attend key j when ``q[.., i] == kv[.., j]`` (on top of whatever
+    the MaskSpec imposes on *global* positions -- with contiguous packing,
+    global causality coincides with within-segment causality).
+
+    Conventions:
+      * ids are arbitrary non-negative ints, constant within a segment;
+        contiguous (sorted) packing is assumed by the block-skip heuristics
+        (correctness never depends on it -- skipping is range-disjointness,
+        which is sound for any layout).
+      * id 0 is the padding segment by convention of the data pipeline
+        (padding attends only padding; its rows are excluded from the loss).
+
+    Being a NamedTuple it is a pytree: it can be passed through jit
+    boundaries, unlike MaskSpec which stays static/hashable.
+    """
+
+    q: jnp.ndarray  # (B, Sq) int32
+    kv: jnp.ndarray  # (B, Skv) int32
+
+    @classmethod
+    def packed(cls, segment_ids: jnp.ndarray) -> "SegmentInfo":
+        """Self-attention over one packed layout: q and kv share the ids."""
+        return cls(q=segment_ids, kv=segment_ids)
+
+
+def make_segment_mask(q_segs: jnp.ndarray, kv_segs: jnp.ndarray) -> jnp.ndarray:
+    """(.., Sq) x (.., Skv) -> (.., Sq, Skv) bool; True = same segment."""
+    return q_segs[..., :, None] == kv_segs[..., None, :]
+
+
+# Padding sentinels for block-padded segment-id arrays. Both backends (XLA
+# flash and the Pallas kernels) rely on the same invariant: the sentinels
+# can never equal a real (non-negative) id, nor each other -- so padded
+# tiles are cross-segment by construction, and padded q rows attend nothing
+# (l = 0 -> o = 0, lse = -inf; the caller trims them).
+Q_PAD_SEGMENT = -2
+KV_PAD_SEGMENT = -1
+
+
+def pad_segments(q_seg: jnp.ndarray, kv_seg: jnp.ndarray, Sqp: int, Skp: int):
+    """Pad (.., Sq)/(.., Skv) int32 segment ids to the blocked lengths with
+    the repo-wide sentinels above."""
+    qs = q_seg.astype(jnp.int32)
+    ks = kv_seg.astype(jnp.int32)
+    if Sqp > qs.shape[-1]:
+        pad = [(0, 0)] * (qs.ndim - 1) + [(0, Sqp - qs.shape[-1])]
+        qs = jnp.pad(qs, pad, constant_values=Q_PAD_SEGMENT)
+    if Skp > ks.shape[-1]:
+        pad = [(0, 0)] * (ks.ndim - 1) + [(0, Skp - ks.shape[-1])]
+        ks = jnp.pad(ks, pad, constant_values=KV_PAD_SEGMENT)
+    return qs, ks
+
+
+def segment_positions(segment_ids: jnp.ndarray) -> jnp.ndarray:
+    """Within-segment positions for a packed row: (B, S) -> (B, S) int32.
+
+    Position resets to 0 at every segment boundary (used for RoPE in
+    ``packed`` mode, so each packed document sees positions 0..len-1).
+    Assumes contiguous packing (equal ids form runs).
+    """
+    S = segment_ids.shape[-1]
+    idx = jnp.arange(S, dtype=jnp.int32)
+    starts = jnp.concatenate(
+        [
+            jnp.ones_like(segment_ids[..., :1], jnp.bool_),
+            segment_ids[..., 1:] != segment_ids[..., :-1],
+        ],
+        axis=-1,
+    )
+    start_idx = jnp.where(starts, idx, 0)
+    start_idx = jax.lax.associative_scan(jnp.maximum, start_idx, axis=-1)
+    return idx - start_idx
+
+
+def segment_tile_visibility(
+    q_segs, kv_segs, q_lo: int, q_hi: int, kv_lo: int, kv_hi: int
+) -> str:
+    """Static classification of a tile by segment ids alone.
+
+    q_segs/kv_segs are *concrete* (numpy) 1-D id vectors; positions are
+    half-open like :func:`tile_visibility`. Used for host-side accounting
+    (`_visible_pairs`) -- the kernels make the same decision dynamically
+    from per-tile id ranges.
+    """
+    import numpy as np
+
+    qs = np.asarray(q_segs)[q_lo:q_hi]
+    ks = np.asarray(kv_segs)[kv_lo:kv_hi]
+    if qs.size == 0 or ks.size == 0:
+        return "empty"
+    eq = qs[:, None] == ks[None, :]
+    if not eq.any():
+        return "empty"
+    if eq.all():
+        return "full"
+    return "partial"
+
+
 def make_tile_mask(
     spec: MaskSpec,
     q_ids: jnp.ndarray,
@@ -76,7 +179,8 @@ def make_tile_mask(
 
     Returns:
       (Bq, Bc) bool array (True = visible), or None if the tile is fully
-      visible (saves the select).
+      visible (saves the select). Segment (varlen) masking composes on top
+      via :func:`make_segment_mask` at the call sites.
     """
     if spec.is_trivial:
         return None

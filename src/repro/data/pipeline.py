@@ -27,8 +27,56 @@ class DataConfig:
     seq_len: int
     vocab_size: int
     seed: int = 0
-    source: str = "synthetic"  # 'synthetic' | 'file'
+    source: str = "synthetic"  # 'synthetic' | 'file' | 'packed'
     path: Optional[str] = None
+    # 'packed' (varlen) source: ragged document lengths, uniform in
+    # [min_doc_len, max_doc_len] (max defaults to seq_len).
+    min_doc_len: int = 16
+    max_doc_len: Optional[int] = None
+
+
+def pack_documents(docs, seq_len: int, pad_id: int = 0):
+    """Greedy first-fit packing of ragged token docs into fixed-width rows.
+
+    Each doc contributes its (input, target) next-token pairs: a doc of
+    ``L`` tokens occupies ``L - 1`` packed positions. Segment ids are
+    1-based per row; 0 marks padding. The loss mask excludes padding (and
+    thereby every cross-segment boundary -- targets never leak between
+    docs because each doc's targets come from that doc alone).
+
+    Returns (inputs, targets, segment_ids, loss_mask) as (N, seq_len)
+    arrays (loss_mask float32, others int32); N = however many rows the
+    docs need.
+    """
+    rows = []  # list of lists of (inp, tgt) doc slices
+    space = []  # remaining capacity per row
+    for doc in docs:
+        doc = np.asarray(doc)
+        assert doc.ndim == 1 and len(doc) >= 2, "docs need >= 2 tokens"
+        n = len(doc) - 1
+        assert n <= seq_len, f"doc of {n} pairs exceeds seq_len {seq_len}"
+        for r in range(len(rows)):  # first fit
+            if space[r] >= n:
+                rows[r].append(doc)
+                space[r] -= n
+                break
+        else:
+            rows.append([doc])
+            space.append(seq_len - n)
+    N = len(rows)
+    inputs = np.full((N, seq_len), pad_id, np.int32)
+    targets = np.full((N, seq_len), pad_id, np.int32)
+    segment_ids = np.zeros((N, seq_len), np.int32)
+    for r, row_docs in enumerate(rows):
+        ofs = 0
+        for s, doc in enumerate(row_docs, start=1):
+            n = len(doc) - 1
+            inputs[r, ofs : ofs + n] = doc[:-1]
+            targets[r, ofs : ofs + n] = doc[1:]
+            segment_ids[r, ofs : ofs + n] = s
+            ofs += n
+    loss_mask = (segment_ids != 0).astype(np.float32)
+    return inputs, targets, segment_ids, loss_mask
 
 
 class SyntheticLM:
@@ -72,6 +120,57 @@ class SyntheticLM:
         self.step_ = int(state["step"])
 
 
+class SyntheticVarlenLM(SyntheticLM):
+    """Packed (varlen) synthetic stream: ragged docs, no padding waste.
+
+    Same learnable permutation process (and (seed, step) determinism /
+    state / restore contract) as :class:`SyntheticLM`, but each batch row
+    packs several back-to-back documents of random length. ``batch(step)``
+    returns a dict with inputs / targets / segment_ids / loss_mask, the
+    contract of the ``packed=True`` train path: attention must not cross
+    segment boundaries and padding is excluded from the loss. Doc
+    generation loops per token on the host like SyntheticLM; fine for a
+    test/bench source (the production packed path is pack_documents over a
+    real corpus).
+    """
+
+    def _doc(self, rng, length: int) -> np.ndarray:
+        toks = np.empty(length + 1, np.int64)
+        toks[0] = rng.integers(0, self.cfg.vocab_size)
+        noise = rng.random(length) < 0.1
+        jumps = rng.integers(0, self.cfg.vocab_size, size=length)
+        for t in range(1, length + 1):
+            nxt = self.perm[toks[t - 1]]
+            toks[t] = jumps[t - 1] if noise[t - 1] else nxt
+        return toks
+
+    def batch(self, step: int) -> dict:
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed, step))
+        B, S = cfg.batch_size, cfg.seq_len
+        lo = cfg.min_doc_len
+        hi = min(cfg.max_doc_len or S, S)
+        inputs = np.zeros((B, S), np.int32)
+        targets = np.zeros((B, S), np.int32)
+        segment_ids = np.zeros((B, S), np.int32)
+        for b in range(B):
+            ofs, seg = 0, 1
+            while S - ofs >= lo:
+                n = int(rng.integers(lo, min(hi, S - ofs) + 1))
+                doc = self._doc(rng, n)  # n+1 tokens -> n pairs
+                inputs[b, ofs : ofs + n] = doc[:-1]
+                targets[b, ofs : ofs + n] = doc[1:]
+                segment_ids[b, ofs : ofs + n] = seg
+                ofs += n
+                seg += 1
+        return {
+            "inputs": inputs,
+            "targets": targets,
+            "segment_ids": segment_ids,
+            "loss_mask": (segment_ids != 0).astype(np.float32),
+        }
+
+
 class PackedFileSource:
     """Pack a flat token file into (B, S+1) windows; deterministic in step."""
 
@@ -102,4 +201,8 @@ class PackedFileSource:
 
 
 def make_source(cfg: DataConfig):
-    return PackedFileSource(cfg) if cfg.source == "file" else SyntheticLM(cfg)
+    if cfg.source == "file":
+        return PackedFileSource(cfg)
+    if cfg.source == "packed":
+        return SyntheticVarlenLM(cfg)
+    return SyntheticLM(cfg)

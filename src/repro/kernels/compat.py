@@ -1,0 +1,19 @@
+"""Version shims for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and
+back-compat aliases come and go between releases); the kernels only ever
+need "the dataclass that accepts dimension_semantics". Resolve it once here
+so flash_fwd / flash_bwd / flash_decode are version-agnostic.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+if hasattr(pltpu, "CompilerParams"):
+    CompilerParams = pltpu.CompilerParams
+elif hasattr(pltpu, "TPUCompilerParams"):
+    CompilerParams = pltpu.TPUCompilerParams
+else:  # very old jax: dimension_semantics went via a plain dict
+    def CompilerParams(**kwargs):  # type: ignore[no-redef]
+        return dict(**kwargs)

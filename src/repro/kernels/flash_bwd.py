@@ -31,13 +31,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.masks import DEFAULT_MASK_VALUE, MaskSpec
+from repro.kernels.compat import CompilerParams
 from repro.kernels.flash_fwd import LANES, _tile_mask, _visibility
 
 
-def _recompute_p(q, k, lse, spec, i, j, bq, bk, kv_valid):
+def _recompute_p(q, k, lse, spec, i, j, bq, bk, kv_valid, q_seg=None, kv_seg=None):
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    _, needs_mask = _visibility(spec, i, j, bq, bk, kv_valid)
-    mask = _tile_mask(spec, i, j, bq, bk, kv_valid)
+    _, needs_mask = _visibility(spec, i, j, bq, bk, kv_valid, q_seg, kv_seg)
+    mask = _tile_mask(spec, i, j, bq, bk, kv_valid, q_seg, kv_seg)
     s = jnp.where(jnp.logical_or(~needs_mask, mask), s, DEFAULT_MASK_VALUE)
     return jnp.exp(s - lse), s
 
@@ -48,11 +49,18 @@ def _recompute_p(q, k, lse, spec, i, j, bq, bk, kv_valid):
 
 
 def _dkv_kernel(
-    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
-    dk_ref, dv_ref,
-    dk_scr, dv_scr,
-    *, spec: MaskSpec, bq: int, bk: int, t_q: int, group: int, kv_valid: int,
+    *refs,
+    spec: MaskSpec, bq: int, bk: int, t_q: int, group: int, kv_valid: int,
+    has_segments: bool = False,
 ):
+    if has_segments:
+        (q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qs_ref, ks_ref,
+         dk_ref, dv_ref, dk_scr, dv_scr) = refs
+        q_seg, kv_seg = qs_ref[0], ks_ref[0]
+    else:
+        (q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+         dk_ref, dv_ref, dk_scr, dv_scr) = refs
+        q_seg = kv_seg = None
     j = pl.program_id(1)
     g = pl.program_id(2)
     i = pl.program_id(3)
@@ -62,7 +70,7 @@ def _dkv_kernel(
         dk_scr[...] = jnp.zeros_like(dk_scr)
         dv_scr[...] = jnp.zeros_like(dv_scr)
 
-    empty, _ = _visibility(spec, i, j, bq, bk, kv_valid)
+    empty, _ = _visibility(spec, i, j, bq, bk, kv_valid, q_seg, kv_seg)
 
     @pl.when(~empty)
     def _compute():
@@ -72,7 +80,9 @@ def _dkv_kernel(
         do = do_ref[0]    # (bq, d)
         lse = lse_ref[0][:, :1]    # (bq, 1)
         delta = delta_ref[0][:, :1]
-        p, _ = _recompute_p(q, k, lse, spec, i, j, bq, bk, kv_valid)  # line 11
+        p, _ = _recompute_p(
+            q, k, lse, spec, i, j, bq, bk, kv_valid, q_seg, kv_seg
+        )  # line 11
         # dV_j += P^T dO_i                                          (line 12)
         dv_scr[...] += jax.lax.dot_general(
             p.astype(do.dtype), do, (((0,), (0,)), ((), ())),
@@ -98,16 +108,18 @@ def _dkv_kernel(
 
 def flash_bwd_dkv(
     q, k, v, do, lse, delta, spec: MaskSpec, *,
-    group: int, block_q: int, block_kv: int, kv_valid: int, interpret: bool = True,
+    group: int, block_q: int, block_kv: int, kv_valid: int,
+    q_seg=None, kv_seg=None, interpret: bool = True,
 ):
     """Returns (dk, dv) in (BHk, Skp, D) fp32. q pre-scaled by 1/sqrt(d)."""
     BH, Sq, D = q.shape
     BHk, Skp, _ = k.shape
     t_q, t_kv = Sq // block_q, Skp // block_kv
     grid = (BHk, t_kv, group, t_q)
+    has_segments = q_seg is not None
     kernel = functools.partial(
         _dkv_kernel, spec=spec, bq=block_q, bk=block_kv, t_q=t_q, group=group,
-        kv_valid=kv_valid,
+        kv_valid=kv_valid, has_segments=has_segments,
     )
     from repro.core.flash import _visible_pairs
 
@@ -125,10 +137,18 @@ def flash_bwd_dkv(
         (1, block_q, LANES), lambda bh, j, g, i, grp=group: (bh * grp + g, i, 0)
     )
     kvspec = pl.BlockSpec((1, block_kv, D), lambda bh, j, g, i: (bh, j, 0))
+    in_specs = [qspec, kvspec, kvspec, qspec, lspec, lspec]
+    inputs = [q, k, v, do, lse, delta]
+    if has_segments:
+        in_specs += [
+            pl.BlockSpec((1, block_q), lambda bh, j, g, i, grp=group: (bh * grp + g, i)),
+            pl.BlockSpec((1, block_kv), lambda bh, j, g, i: (bh, j)),
+        ]
+        inputs += [q_seg, kv_seg]
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[qspec, kvspec, kvspec, qspec, lspec, lspec],
+        in_specs=in_specs,
         out_specs=[kvspec, kvspec],
         out_shape=[
             jax.ShapeDtypeStruct((BHk, Skp, D), jnp.float32),
@@ -138,13 +158,13 @@ def flash_bwd_dkv(
             pltpu.VMEM((block_kv, D), jnp.float32),
             pltpu.VMEM((block_kv, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary", "arbitrary"),
         ),
         cost_estimate=cost,
         interpret=interpret,
-        name="fa2_bwd_dkv",
-    )(q, k, v, do, lse, delta)
+        name="fa2_bwd_dkv_varlen" if has_segments else "fa2_bwd_dkv",
+    )(*inputs)
 
 
 # ---------------------------------------------------------------------------
@@ -153,11 +173,18 @@ def flash_bwd_dkv(
 
 
 def _dq_kernel(
-    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
-    dq_ref,
-    dq_scr,
-    *, spec: MaskSpec, bq: int, bk: int, t_kv: int, kv_valid: int,
+    *refs,
+    spec: MaskSpec, bq: int, bk: int, t_kv: int, kv_valid: int,
+    has_segments: bool = False,
 ):
+    if has_segments:
+        (q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qs_ref, ks_ref,
+         dq_ref, dq_scr) = refs
+        q_seg, kv_seg = qs_ref[0], ks_ref[0]
+    else:
+        (q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+         dq_ref, dq_scr) = refs
+        q_seg = kv_seg = None
     i = pl.program_id(1)
     j = pl.program_id(2)
 
@@ -165,7 +192,7 @@ def _dq_kernel(
     def _init():
         dq_scr[...] = jnp.zeros_like(dq_scr)
 
-    empty, _ = _visibility(spec, i, j, bq, bk, kv_valid)
+    empty, _ = _visibility(spec, i, j, bq, bk, kv_valid, q_seg, kv_seg)
 
     @pl.when(~empty)
     def _compute():
@@ -175,7 +202,7 @@ def _dq_kernel(
         do = do_ref[0]
         lse = lse_ref[0][:, :1]
         delta = delta_ref[0][:, :1]
-        p, _ = _recompute_p(q, k, lse, spec, i, j, bq, bk, kv_valid)
+        p, _ = _recompute_p(q, k, lse, spec, i, j, bq, bk, kv_valid, q_seg, kv_seg)
         dp = jax.lax.dot_general(
             do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )
@@ -193,15 +220,18 @@ def _dq_kernel(
 
 def flash_bwd_dq(
     q, k, v, do, lse, delta, spec: MaskSpec, *,
-    group: int, block_q: int, block_kv: int, kv_valid: int, interpret: bool = True,
+    group: int, block_q: int, block_kv: int, kv_valid: int,
+    q_seg=None, kv_seg=None, interpret: bool = True,
 ):
     """Returns dq in (BH, Sq, D) fp32 (gradient w.r.t. *scaled* q)."""
     BH, Sq, D = q.shape
     BHk, Skp, _ = k.shape
     t_q, t_kv = Sq // block_q, Skp // block_kv
     grid = (BH, t_q, t_kv)
+    has_segments = q_seg is not None
     kernel = functools.partial(
-        _dq_kernel, spec=spec, bq=block_q, bk=block_kv, t_kv=t_kv, kv_valid=kv_valid
+        _dq_kernel, spec=spec, bq=block_q, bk=block_kv, t_kv=t_kv,
+        kv_valid=kv_valid, has_segments=has_segments,
     )
     from repro.core.flash import _visible_pairs
 
@@ -215,17 +245,25 @@ def flash_bwd_dq(
     qspec = pl.BlockSpec((1, block_q, D), lambda bh, i, j: (bh, i, 0))
     lspec = pl.BlockSpec((1, block_q, LANES), lambda bh, i, j: (bh, i, 0))
     kvspec = pl.BlockSpec((1, block_kv, D), lambda bh, i, j, g=group: (bh // g, j, 0))
+    in_specs = [qspec, kvspec, kvspec, qspec, lspec, lspec]
+    inputs = [q, k, v, do, lse, delta]
+    if has_segments:
+        in_specs += [
+            pl.BlockSpec((1, block_q), lambda bh, i, j: (bh, i)),
+            pl.BlockSpec((1, block_kv), lambda bh, i, j, g=group: (bh // g, j)),
+        ]
+        inputs += [q_seg, kv_seg]
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[qspec, kvspec, kvspec, qspec, lspec, lspec],
+        in_specs=in_specs,
         out_specs=qspec,
         out_shape=jax.ShapeDtypeStruct((BH, Sq, D), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         cost_estimate=cost,
         interpret=interpret,
-        name="fa2_bwd_dq",
-    )(q, k, v, do, lse, delta)
+        name="fa2_bwd_dq_varlen" if has_segments else "fa2_bwd_dq",
+    )(*inputs)

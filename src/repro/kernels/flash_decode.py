@@ -24,16 +24,19 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.masks import DEFAULT_MASK_VALUE
+from repro.kernels.compat import CompilerParams
 
 LANES = 128
 
 
 def _decode_kernel(
-    len_ref,  # SMEM (B*Hkv,)
-    q_ref, k_ref, v_ref,
-    o_ref, lse_ref,
-    *, chunk: int, window: Optional[int], sink: int,
+    *refs,  # SMEM lens [+ q segment], q/k/v [+ kv segment ids], outputs
+    chunk: int, window: Optional[int], sink: int, has_segments: bool = False,
 ):
+    if has_segments:
+        len_ref, qseg_ref, q_ref, k_ref, v_ref, kseg_ref, o_ref, lse_ref = refs
+    else:
+        len_ref, q_ref, k_ref, v_ref, o_ref, lse_ref = refs
     bh = pl.program_id(0)
     c = pl.program_id(1)
     L = len_ref[bh]
@@ -44,6 +47,10 @@ def _decode_kernel(
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
     cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + c * chunk
     valid = cols < L
+    if has_segments:
+        # Packed cache: never read across a segment boundary (the query
+        # belongs to exactly one segment of its cache row).
+        valid = valid & (kseg_ref[0][None, :] == qseg_ref[bh])
     if window is not None:
         in_win = cols >= L - window
         if sink:
@@ -74,6 +81,8 @@ def flash_decode_kernel(
     num_splits: int = 8,
     window: Optional[int] = None,
     sink: int = 0,
+    kv_seg: Optional[jnp.ndarray] = None,  # (BHk, S) int32 packed-cache ids
+    q_seg: Optional[jnp.ndarray] = None,  # (BHk,) int32 query's segment
     interpret: bool = True,
 ):
     BHk, G, D = q.shape
@@ -82,21 +91,32 @@ def flash_decode_kernel(
     while S % ns != 0:
         ns -= 1
     chunk = S // ns
-    kernel = functools.partial(_decode_kernel, chunk=chunk, window=window, sink=sink)
+    has_segments = kv_seg is not None
+    kernel = functools.partial(
+        _decode_kernel, chunk=chunk, window=window, sink=sink,
+        has_segments=has_segments,
+    )
     cost = pl.CostEstimate(
         flops=2 * BHk * G * S * D * 2,
         bytes_accessed=2 * k.size * k.dtype.itemsize + 2 * q.size * q.dtype.itemsize,
         transcendentals=BHk * G * S,
     )
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, G, D), lambda bh, c: (bh, 0, 0)),
+        pl.BlockSpec((1, chunk, D), lambda bh, c: (bh, c, 0)),
+        pl.BlockSpec((1, chunk, D), lambda bh, c: (bh, c, 0)),
+    ]
+    inputs = [lengths, q, k, v]
+    if has_segments:
+        in_specs.insert(1, pl.BlockSpec(memory_space=pltpu.SMEM))
+        inputs.insert(1, q_seg)
+        in_specs.append(pl.BlockSpec((1, chunk), lambda bh, c: (bh, c)))
+        inputs.append(kv_seg)
     return pl.pallas_call(
         kernel,
         grid=(BHk, ns),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, G, D), lambda bh, c: (bh, 0, 0)),
-            pl.BlockSpec((1, chunk, D), lambda bh, c: (bh, c, 0)),
-            pl.BlockSpec((1, chunk, D), lambda bh, c: (bh, c, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, G, D), lambda bh, c: (bh, c, 0, 0)),
             pl.BlockSpec((1, 1, G, LANES), lambda bh, c: (bh, c, 0, 0)),
@@ -105,10 +125,10 @@ def flash_decode_kernel(
             jax.ShapeDtypeStruct((BHk, ns, G, D), jnp.float32),
             jax.ShapeDtypeStruct((BHk, ns, G, LANES), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         cost_estimate=cost,
         interpret=interpret,
-        name="fa2_decode",
-    )(lengths, q, k, v)
+        name="fa2_decode_varlen" if has_segments else "fa2_decode",
+    )(*inputs)

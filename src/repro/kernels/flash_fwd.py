@@ -32,16 +32,26 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.masks import DEFAULT_MASK_VALUE, MaskSpec
+from repro.kernels.compat import CompilerParams
 
 LANES = 128
 
 
-def _visibility(spec: MaskSpec, i, j, bq: int, bk: int, kv_valid: int):
+def _visibility(
+    spec: MaskSpec, i, j, bq: int, bk: int, kv_valid: int,
+    q_seg=None, kv_seg=None,
+):
     """In-kernel scalar visibility: returns (is_empty, needs_mask) bools.
 
     i/j are (traced) program ids; spec fields and block sizes are static, so
     every branch below is a static Python branch over *which* scalar ops to
     emit -- the emitted ops themselves are traced scalar arithmetic.
+
+    q_seg/kv_seg: optional loaded (bq,)/(bk,) int32 segment-id tiles (packed
+    varlen). Their min/max ranges drive *data-dependent* block skipping: a
+    tile whose id ranges are disjoint cannot contain an equal pair, so it is
+    empty -- sound for any id layout, and exact for contiguous packing. A
+    tile is mask-free only if both sides are uniform and equal.
     """
     q_lo = i * bq + spec.q_offset
     q_hi = q_lo + bq - 1
@@ -74,6 +84,11 @@ def _visibility(spec: MaskSpec, i, j, bq: int, bk: int, kv_valid: int):
         pad_block = kv_valid // bk
         empty = empty | (kv_lo >= kv_valid)
         full = full & (j != pad_block)
+    if q_seg is not None:
+        qs_lo, qs_hi = jnp.min(q_seg), jnp.max(q_seg)
+        ks_lo, ks_hi = jnp.min(kv_seg), jnp.max(kv_seg)
+        empty = empty | (qs_hi < ks_lo) | (qs_lo > ks_hi)
+        full = full & (qs_lo == qs_hi) & (ks_lo == ks_hi) & (qs_lo == ks_lo)
     return jnp.bool_(empty), ~jnp.bool_(full)
 
 
@@ -82,10 +97,15 @@ def abs_diff(a, b):
     return jnp.where(d < 0, -d, d)
 
 
-def _tile_mask(spec: MaskSpec, i, j, bq: int, bk: int, kv_valid: int):
+def _tile_mask(
+    spec: MaskSpec, i, j, bq: int, bk: int, kv_valid: int,
+    q_seg=None, kv_seg=None,
+):
     rows = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + i * bq + spec.q_offset
     cols = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1) + j * bk
     mask = cols < kv_valid
+    if q_seg is not None:
+        mask = mask & (q_seg[:, None] == kv_seg[None, :])
     if spec.causal:
         mask = mask & (rows >= cols)
         if spec.window is not None:
@@ -102,16 +122,21 @@ def _tile_mask(spec: MaskSpec, i, j, bq: int, bk: int, kv_valid: int):
 
 
 def _fwd_kernel(
-    q_ref, k_ref, v_ref,  # inputs (block refs)
-    o_ref, lse_ref,  # outputs
-    m_scr, l_scr, acc_scr,  # VMEM scratch
-    *,
+    *refs,  # inputs [+ optional segment-id refs], outputs, VMEM scratch
     spec: MaskSpec,
     bq: int,
     bk: int,
     t_kv: int,
     kv_valid: int,
+    has_segments: bool = False,
 ):
+    if has_segments:
+        (q_ref, k_ref, v_ref, qs_ref, ks_ref,
+         o_ref, lse_ref, m_scr, l_scr, acc_scr) = refs
+        q_seg, kv_seg = qs_ref[0], ks_ref[0]  # (bq,), (bk,) int32
+    else:
+        q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr = refs
+        q_seg = kv_seg = None
     i = pl.program_id(1)
     j = pl.program_id(2)
 
@@ -121,7 +146,7 @@ def _fwd_kernel(
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    empty, needs_mask = _visibility(spec, i, j, bq, bk, kv_valid)
+    empty, needs_mask = _visibility(spec, i, j, bq, bk, kv_valid, q_seg, kv_seg)
 
     @pl.when(~empty)
     def _compute():
@@ -131,7 +156,7 @@ def _fwd_kernel(
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )  # (bq, bk)
-        mask = _tile_mask(spec, i, j, bq, bk, kv_valid)
+        mask = _tile_mask(spec, i, j, bq, bk, kv_valid, q_seg, kv_seg)
         s = jnp.where(jnp.logical_or(~needs_mask, mask), s, DEFAULT_MASK_VALUE)
 
         m_prev = m_scr[:, :1]  # (bq, 1)
@@ -168,6 +193,8 @@ def flash_fwd(
     block_q: int,
     block_kv: int,
     kv_valid: int,  # unpadded KV length
+    q_seg: Optional[jnp.ndarray] = None,  # (BH, Sq) int32 segment ids
+    kv_seg: Optional[jnp.ndarray] = None,  # (BHk, Skp) int32
     interpret: bool = True,
 ):
     BH, Sq, D = q.shape
@@ -175,11 +202,15 @@ def flash_fwd(
     assert Sq % block_q == 0 and Skp % block_kv == 0
     t_q, t_kv = Sq // block_q, Skp // block_kv
     grid = (BH, t_q, t_kv)
+    has_segments = q_seg is not None
 
     kernel = functools.partial(
-        _fwd_kernel, spec=spec, bq=block_q, bk=block_kv, t_kv=t_kv, kv_valid=kv_valid
+        _fwd_kernel, spec=spec, bq=block_q, bk=block_kv, t_kv=t_kv,
+        kv_valid=kv_valid, has_segments=has_segments,
     )
     # Roofline-honest cost: count only visible tiles (block skipping).
+    # (Segment skipping is data-dependent, so the static spec-only count is
+    # an upper bound there.)
     from repro.core.flash import _visible_pairs
 
     n_vis = len(_visible_pairs(spec, t_q, t_kv, block_q, block_kv)[0])
@@ -191,14 +222,23 @@ def flash_fwd(
         transcendentals=BH * n_vis * block_q * block_kv,
     )
 
+    in_specs = [
+        pl.BlockSpec((1, block_q, D), lambda bh, i, j: (bh, i, 0)),
+        pl.BlockSpec((1, block_kv, D), lambda bh, i, j, g=group: (bh // g, j, 0)),
+        pl.BlockSpec((1, block_kv, D), lambda bh, i, j, g=group: (bh // g, j, 0)),
+    ]
+    inputs = [q, k, v]
+    if has_segments:
+        in_specs += [
+            pl.BlockSpec((1, block_q), lambda bh, i, j: (bh, i)),
+            pl.BlockSpec((1, block_kv), lambda bh, i, j, g=group: (bh // g, j)),
+        ]
+        inputs += [q_seg, kv_seg]
+
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_q, D), lambda bh, i, j: (bh, i, 0)),
-            pl.BlockSpec((1, block_kv, D), lambda bh, i, j, g=group: (bh // g, j, 0)),
-            pl.BlockSpec((1, block_kv, D), lambda bh, i, j, g=group: (bh // g, j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, block_q, D), lambda bh, i, j: (bh, i, 0)),
             pl.BlockSpec((1, block_q, LANES), lambda bh, i, j: (bh, i, 0)),
@@ -212,10 +252,10 @@ def flash_fwd(
             pltpu.VMEM((block_q, LANES), jnp.float32),
             pltpu.VMEM((block_q, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         cost_estimate=cost,
         interpret=interpret,
-        name="fa2_fwd",
-    )(q, k, v)
+        name="fa2_fwd_varlen" if has_segments else "fa2_fwd",
+    )(*inputs)

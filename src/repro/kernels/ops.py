@@ -68,14 +68,35 @@ def _prep(q, k, v, cfg: PallasFlashConfig):
         kh = jnp.pad(kh, ((0, 0), (0, pad_k), (0, 0)))
         vh = jnp.pad(vh, ((0, 0), (0, pad_k), (0, 0)))
     qh = (qh.astype(jnp.float32) * scale).astype(q.dtype)
-    return qh, kh, vh, dict(B=B, Sq=Sq, Sk=Sk, Hq=Hq, Hk=Hk, G=G, D=D, bq=bq, bk=bk, scale=scale)
+    return qh, kh, vh, dict(
+        B=B, Sq=Sq, Sk=Sk, Sqp=qh.shape[1], Skp=kh.shape[1],
+        Hq=Hq, Hk=Hk, G=G, D=D, bq=bq, bk=bk, scale=scale,
+    )
 
 
-def _fwd_call(q, k, v, cfg: PallasFlashConfig):
+def _prep_segments(q_seg, kv_seg, m):
+    """(B, Sq)/(B, Sk) int32 segment ids -> per-head-row padded layouts.
+
+    Ids are broadcast per head ((B,S) -> (B*H, S), batch-major like
+    ``_heads_layout``) and padded to the block multiple with the repo-wide
+    sentinels (masks.pad_segments): padded tiles become cross-segment, so
+    padded q rows attend nothing (l = 0 -> o = 0, lse = -inf; trimmed by
+    the caller)."""
+    from repro.core.masks import pad_segments
+
+    qs = jnp.repeat(q_seg.astype(jnp.int32), m["Hq"], axis=0)
+    ks = jnp.repeat(kv_seg.astype(jnp.int32), m["Hk"], axis=0)
+    return pad_segments(qs, ks, m["Sqp"], m["Skp"])
+
+
+def _fwd_call(q, k, v, cfg: PallasFlashConfig, q_seg=None, kv_seg=None):
     qh, kh, vh, m = _prep(q, k, v, cfg)
+    qs = ks = None
+    if q_seg is not None:
+        qs, ks = _prep_segments(q_seg, kv_seg, m)
     o, lse = _fwd.flash_fwd(
         qh, kh, vh, cfg.spec, group=m["G"], block_q=m["bq"], block_kv=m["bk"],
-        kv_valid=m["Sk"], interpret=cfg.interpret,
+        kv_valid=m["Sk"], q_seg=qs, kv_seg=ks, interpret=cfg.interpret,
     )
     o = _unheads_layout(o[:, : m["Sq"]], m["B"], m["Hq"]).astype(q.dtype)
     lse_rows = lse[:, : m["Sq"], 0].reshape(m["B"], m["Hq"], m["Sq"])
@@ -92,12 +113,14 @@ def _pallas_flash_fwd(q, k, v, cfg):
     return o, (q, k, v, o, lse)
 
 
-def _pallas_flash_bwd(cfg: PallasFlashConfig, res, do):
-    q, k, v, o, lse = res
+def _bwd_call(q, k, v, o, lse, do, cfg: PallasFlashConfig, q_seg=None, kv_seg=None):
     qh, kh, vh, m = _prep(q, k, v, cfg)  # qh pre-scaled
     B, Sq, Hq, Hk, G, D = m["B"], m["Sq"], m["Hq"], m["Hk"], m["G"], m["D"]
     bq, bk = m["bq"], m["bk"]
     Sqp = qh.shape[1]
+    qs = ks = None
+    if q_seg is not None:
+        qs, ks = _prep_segments(q_seg, kv_seg, m)
 
     doh = _heads_layout(do.astype(jnp.float32))
     oh = _heads_layout(o.astype(jnp.float32))
@@ -116,11 +139,13 @@ def _pallas_flash_bwd(cfg: PallasFlashConfig, res, do):
 
     dk, dv = _bwd.flash_bwd_dkv(
         qh, kh, vh, doh, lse_b, delta_b, cfg.spec,
-        group=G, block_q=bq, block_kv=bk, kv_valid=m["Sk"], interpret=cfg.interpret,
+        group=G, block_q=bq, block_kv=bk, kv_valid=m["Sk"],
+        q_seg=qs, kv_seg=ks, interpret=cfg.interpret,
     )
     dq = _bwd.flash_bwd_dq(
         qh, kh, vh, doh, lse_b, delta_b, cfg.spec,
-        group=G, block_q=bq, block_kv=bk, kv_valid=m["Sk"], interpret=cfg.interpret,
+        group=G, block_q=bq, block_kv=bk, kv_valid=m["Sk"],
+        q_seg=qs, kv_seg=ks, interpret=cfg.interpret,
     )
     dq = _unheads_layout(dq[:, :Sq], B, Hq) * m["scale"]
     dk = _unheads_layout(dk[:, : m["Sk"]], B, Hk)
@@ -128,7 +153,36 @@ def _pallas_flash_bwd(cfg: PallasFlashConfig, res, do):
     return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
 
 
+def _pallas_flash_bwd(cfg: PallasFlashConfig, res, do):
+    q, k, v, o, lse = res
+    return _bwd_call(q, k, v, o, lse, do, cfg)
+
+
 _pallas_flash.defvjp(_pallas_flash_fwd, _pallas_flash_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Segment-packed (varlen) attention: same kernels, segment-aware tiles.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _pallas_flash_varlen(q, k, v, q_seg, kv_seg, cfg: PallasFlashConfig):
+    return _fwd_call(q, k, v, cfg, q_seg, kv_seg)[0]
+
+
+def _pallas_flash_varlen_fwd(q, k, v, q_seg, kv_seg, cfg):
+    o, lse = _fwd_call(q, k, v, cfg, q_seg, kv_seg)
+    return o, (q, k, v, q_seg, kv_seg, o, lse)
+
+
+def _pallas_flash_varlen_bwd(cfg: PallasFlashConfig, res, do):
+    q, k, v, q_seg, kv_seg, o, lse = res
+    dq, dk, dv = _bwd_call(q, k, v, o, lse, do, cfg, q_seg, kv_seg)
+    return dq, dk, dv, None, None  # integer segment ids carry no gradient
+
+
+_pallas_flash_varlen.defvjp(_pallas_flash_varlen_fwd, _pallas_flash_varlen_bwd)
 
 
 def flash_attention_pallas(
@@ -141,6 +195,58 @@ def flash_attention_pallas(
         spec=spec, block_q=block_q, block_kv=block_kv, scale=scale, interpret=interpret
     )
     return _pallas_flash(q, k, v, cfg)
+
+
+def flash_attention_pallas_varlen(
+    q, k, v, segment_ids, spec: MaskSpec = MaskSpec(causal=True), *,
+    kv_segment_ids=None, scale: Optional[float] = None,
+    block_q: int = 512, block_kv: int = 512, interpret: bool = True,
+):
+    """Differentiable segment-packed (varlen) FA2 via the Pallas kernels.
+
+    Each batch row packs several back-to-back sequences; ``segment_ids``
+    (B, Sq) int32 marks which tokens belong together (id 0 = padding by the
+    data-pipeline convention -- any non-negative ids work). Query i attends
+    key j iff their ids match AND the MaskSpec admits the *global* positions
+    (with contiguous packing, global causality == within-segment causality).
+    Cross-segment tiles are skipped in all three kernels (fwd, dkv, dq) via
+    per-tile id-range disjointness -- the paper's Section 3.1 block skipping
+    generalized from a static causal schedule to data-dependent segments.
+
+    kv_segment_ids defaults to segment_ids (self-attention over one packed
+    layout); a ``masks.SegmentInfo`` is accepted in place of the raw array.
+    Returns o (B, Sq, Hq, D).
+    """
+    from repro.core.masks import SegmentInfo
+
+    if isinstance(segment_ids, SegmentInfo):
+        segment_ids, kv_segment_ids = segment_ids.q, segment_ids.kv
+    if kv_segment_ids is None:
+        kv_segment_ids = segment_ids
+    assert segment_ids.shape == q.shape[:2], (segment_ids.shape, q.shape)
+    assert kv_segment_ids.shape == k.shape[:2], (kv_segment_ids.shape, k.shape)
+    cfg = PallasFlashConfig(
+        spec=spec, block_q=block_q, block_kv=block_kv, scale=scale, interpret=interpret
+    )
+    return _pallas_flash_varlen(
+        q, k, v, segment_ids.astype(jnp.int32), kv_segment_ids.astype(jnp.int32), cfg
+    )
+
+
+def flash_attention_pallas_varlen_with_lse(
+    q, k, v, segment_ids, spec: MaskSpec = MaskSpec(causal=True), *,
+    kv_segment_ids=None, scale: Optional[float] = None,
+    block_q: int = 512, block_kv: int = 512, interpret: bool = True,
+):
+    """Forward-only varlen (serving): returns (o, lse (B, Hq, Sq))."""
+    if kv_segment_ids is None:
+        kv_segment_ids = segment_ids
+    cfg = PallasFlashConfig(
+        spec=spec, block_q=block_q, block_kv=block_kv, scale=scale, interpret=interpret
+    )
+    return _fwd_call(
+        q, k, v, cfg, segment_ids.astype(jnp.int32), kv_segment_ids.astype(jnp.int32)
+    )
 
 
 def flash_attention_pallas_with_lse(
@@ -157,9 +263,14 @@ def flash_attention_pallas_with_lse(
 def flash_decode_pallas(
     q, k_cache, v_cache, cache_length, *,
     window: Optional[int] = None, sink: int = 0, scale: Optional[float] = None,
-    num_splits: int = 8, interpret: bool = True,
+    num_splits: int = 8, kv_segment_ids=None, q_segment=None,
+    interpret: bool = True,
 ):
-    """Split-KV decode via the Pallas kernel. q (B,1,Hq,D); returns (o, lse)."""
+    """Split-KV decode via the Pallas kernel. q (B,1,Hq,D); returns (o, lse).
+
+    kv_segment_ids (B, S) + q_segment (B,) restrict each query to its own
+    segment of a *packed* KV cache (no reads across segment boundaries).
+    """
     B, one, Hq, D = q.shape
     assert one == 1
     _, S, Hk, _ = k_cache.shape
@@ -171,9 +282,14 @@ def flash_decode_pallas(
     kh = _heads_layout(k_cache)
     vh = _heads_layout(v_cache)
     lens = jnp.repeat(cache_length.astype(jnp.int32), Hk)
+    kv_seg = q_seg = None
+    if kv_segment_ids is not None:
+        assert q_segment is not None, "packed decode needs q_segment (B,)"
+        kv_seg = jnp.repeat(kv_segment_ids.astype(jnp.int32), Hk, axis=0)
+        q_seg = jnp.repeat(q_segment.astype(jnp.int32), Hk)
     o_parts, lse_parts = _dec.flash_decode_kernel(
         qh, kh, vh, lens, num_splits=num_splits, window=window, sink=sink,
-        interpret=interpret,
+        kv_seg=kv_seg, q_seg=q_seg, interpret=interpret,
     )
     # Merge the splits (associative combine) -- (ns, BHk, G, D) / (ns, BHk, G)
     o, lse = combine_lse_outputs(

@@ -16,7 +16,7 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
-from repro.core.masks import MaskSpec, make_tile_mask
+from repro.core.masks import MaskSpec, make_segment_mask, make_tile_mask
 
 
 def attention_reference(
@@ -26,10 +26,15 @@ def attention_reference(
     spec: MaskSpec = MaskSpec(),
     scale: Optional[float] = None,
     kv_length: Optional[jnp.ndarray] = None,
+    segment_ids: Optional[jnp.ndarray] = None,
+    kv_segment_ids: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Naive exact attention. Returns (o, lse).
 
     kv_length: optional (B,) int32 of valid KV lengths (for padded caches).
+    segment_ids / kv_segment_ids: optional (B, Sq) / (B, Sk) int32 packed
+    varlen ids -- visibility additionally requires equal ids (the dense
+    ground truth the varlen kernels are tested against).
     """
     B, Sq, Hq, D = q.shape
     _, Sk, Hk, _ = k.shape
@@ -48,10 +53,16 @@ def attention_reference(
     q_ids = jnp.arange(Sq, dtype=jnp.int32) + spec.q_offset
     kv_ids = jnp.arange(Sk, dtype=jnp.int32)
     mask = make_tile_mask(spec, q_ids, kv_ids)  # (Sq, Sk) or None
+    if segment_ids is not None:
+        if kv_segment_ids is None:
+            kv_segment_ids = segment_ids
+        seg = make_segment_mask(segment_ids, kv_segment_ids)  # (B, Sq, Sk)
+        seg = seg[:, None, None]  # broadcast over (Hk, G)
+        mask = seg if mask is None else (mask & seg)
     if kv_length is not None:
         valid = kv_ids[None, :] < kv_length[:, None]  # (B, Sk)
         valid = valid[:, None, None, None, :]
-        mask = valid if mask is None else (mask[None, None, None] & valid)
+        mask = valid if mask is None else (mask & valid)
     if mask is not None:
         s = jnp.where(mask, s, -jnp.inf)
 

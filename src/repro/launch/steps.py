@@ -39,13 +39,14 @@ def loss_fn(cfg: ModelConfig, attn_cfg: AttentionConfig, params, batch, ce_chunk
         )
     else:
         hidden, aux, nprefix = lm.forward(
-            cfg, params, batch["inputs"], attn_cfg, patches=batch.get("patches")
+            cfg, params, batch["inputs"], attn_cfg, patches=batch.get("patches"),
+            segment_ids=batch.get("segment_ids"),
         )
     if nprefix:
         hidden = hidden[:, nprefix:]
     loss, metrics = chunked_cross_entropy(
         _embed_params(cfg, params), cfg.tie_embeddings, hidden, batch["targets"],
-        vocab_valid=cfg.vocab_size, chunk=ce_chunk,
+        vocab_valid=cfg.vocab_size, mask=batch.get("loss_mask"), chunk=ce_chunk,
     )
     return loss + aux, {"ce_loss": loss, "aux_loss": aux, **metrics}
 

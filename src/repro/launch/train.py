@@ -64,6 +64,7 @@ class TrainLoopConfig:
     attn_impl: str = "flash_xla"
     log_every: int = 10
     seed: int = 0
+    packed: bool = False  # varlen sequence packing (segment-masked attention)
 
 
 def resolve_model(arch: Optional[str], preset: Optional[str], reduce: bool) -> ModelConfig:
@@ -81,6 +82,7 @@ def train(cfg: ModelConfig, loop: TrainLoopConfig, opt_cfg: Optional[AdamWConfig
     data = make_source(DataConfig(
         batch_size=loop.batch_size, seq_len=loop.seq_len,
         vocab_size=cfg.vocab_size, seed=loop.seed,
+        source="packed" if loop.packed else "synthetic",
     ))
     step_fn = jax.jit(build_train_step(
         cfg, attn_cfg, opt_cfg, microbatches=loop.microbatches, ce_chunk=512,
@@ -104,8 +106,10 @@ def train(cfg: ModelConfig, loop: TrainLoopConfig, opt_cfg: Optional[AdamWConfig
           f"{loop.steps} steps x {loop.batch_size}x{loop.seq_len} tokens, attn={loop.attn_impl}")
 
     for step in range(start_step, loop.steps):
-        inputs, targets = data.batch(step)
-        batch = {"inputs": jnp.asarray(inputs), "targets": jnp.asarray(targets)}
+        out = data.batch(step)
+        if not isinstance(out, dict):
+            out = {"inputs": out[0], "targets": out[1]}
+        batch = {k: jnp.asarray(v) for k, v in out.items()}
         monitor.start()
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         loss = float(metrics["loss"])
@@ -145,12 +149,15 @@ def main():
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--attn", default="flash_xla", choices=("ref", "flash_xla", "flash_pallas"))
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--packed", action="store_true",
+                    help="varlen sequence packing (segment-masked attention)")
     args = ap.parse_args()
 
     cfg = resolve_model(args.arch, args.preset, args.reduce)
     loop = TrainLoopConfig(
         steps=args.steps, seq_len=args.seq, batch_size=args.batch,
         microbatches=args.microbatches, attn_impl=args.attn, ckpt_dir=args.ckpt_dir,
+        packed=args.packed,
     )
     _, _, history = train(cfg, loop)
     first = np.mean(history["loss"][:5]) if history["loss"] else float("nan")

@@ -118,8 +118,15 @@ def apply_attention(
     *,
     rope_theta: Optional[float] = None,
     x_kv: Optional[jnp.ndarray] = None,
+    segment_ids: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
-    """Full-sequence attention (train / encoder / cross). x (B,S,d)."""
+    """Full-sequence attention (train / encoder / cross). x (B,S,d).
+
+    segment_ids (B, S) enables packed varlen training: attention never
+    crosses a segment boundary (``packed=True`` mode; the caller supplies
+    within-segment RoPE positions). Not combined with context parallelism
+    -- packed rows are data-sharded like any other batch row.
+    """
     q = _project_q(p, cfg, x)
     k, v = _project_kv(p, cfg, x_kv if x_kv is not None else x)
     if x_kv is None and rope_theta is not None:
@@ -130,7 +137,7 @@ def apply_attention(
     # 'kv_seq' logical axis is unsharded (heads-sharded archs, CPU tests).
     k, v = gather_kv(k, v)
     k, v = _expand_gqa_for_sharding(cfg, k, v)
-    o = attention(q, k, v, spec, attn_cfg)
+    o = attention(q, k, v, spec, attn_cfg, segment_ids=segment_ids)
     return _out(p, cfg, o)
 
 

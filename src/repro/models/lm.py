@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.attention import AttentionConfig
+from repro.core import masks as masks_mod
 from repro.core.masks import MaskSpec
 from repro.distributed.sharding import constrain
 from repro.models import layers as L
@@ -92,16 +93,25 @@ def _apply_mlp_block(p, cfg, x):
     return L.apply_mlp(p["mlp"], h, cfg.mlp), jnp.zeros((), jnp.float32)
 
 
-def apply_layer(kind, p, cfg, x, positions, attn_cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def apply_layer(
+    kind, p, cfg, x, positions, attn_cfg, segment_ids=None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
     h = L.apply_norm(p["ln1"], x, cfg.norm_eps, cfg.norm)
     spec = _spec_for(cfg, kind)
     if kind in ("attn", "attn_local"):
         mix = apply_attention(
-            p["mixer"], cfg, h, positions, spec, attn_cfg, rope_theta=_theta_for(cfg, kind)
+            p["mixer"], cfg, h, positions, spec, attn_cfg,
+            rope_theta=_theta_for(cfg, kind), segment_ids=segment_ids,
         )
     elif kind == "mamba":
+        if segment_ids is not None:
+            raise ValueError("packed (varlen) mode supports attention layers only; "
+                             f"got layer kind {kind!r} (SSM state crosses segments)")
         mix = apply_mamba(p["mixer"], cfg, h, remat=cfg.remat)
     else:
+        if segment_ids is not None:
+            raise ValueError("packed (varlen) mode supports attention layers only; "
+                             f"got layer kind {kind!r}")
         mix = apply_hybrid(
             p["mixer"], cfg, h, positions, spec, attn_cfg,
             rope_theta=_theta_for(cfg, kind), remat=cfg.remat,
@@ -221,7 +231,7 @@ def _embed_inputs(cfg, params, tokens, patches=None):
     return constrain(h, "batch", "seq", "embed"), positions, n_prefix
 
 
-def _run_groups(cfg, params, h, positions, attn_cfg):
+def _run_groups(cfg, params, h, positions, attn_cfg, segment_ids=None):
     """Scan the grouped layers; returns (h, aux_sum)."""
     U = cfg.group_size
     aux0 = jnp.zeros((), jnp.float32)
@@ -229,7 +239,9 @@ def _run_groups(cfg, params, h, positions, attn_cfg):
     def group_body(carry, gp):
         x, aux = carry
         for u, kind in enumerate(cfg.layer_pattern):
-            x, a = apply_layer(kind, gp[f"slot_{u}"], cfg, x, positions, attn_cfg)
+            x, a = apply_layer(
+                kind, gp[f"slot_{u}"], cfg, x, positions, attn_cfg, segment_ids
+            )
             aux = aux + a
         return (x, aux), None
 
@@ -242,15 +254,25 @@ def _run_groups(cfg, params, h, positions, attn_cfg):
             for gp in gs:
                 (h, aux0), _ = body((h, aux0), gp)
     for i, kind in enumerate(cfg.tail_pattern):
-        h, a = apply_layer(kind, params["tail"][i], cfg, h, positions, attn_cfg)
+        h, a = apply_layer(kind, params["tail"][i], cfg, h, positions, attn_cfg, segment_ids)
         aux0 = aux0 + a
     return h, aux0
 
 
-def forward(cfg, params, tokens, attn_cfg: AttentionConfig, patches=None):
-    """-> (hidden (B, S_total, d), aux_loss, n_prefix). Caller unembeds."""
+def forward(cfg, params, tokens, attn_cfg: AttentionConfig, patches=None,
+            segment_ids=None):
+    """-> (hidden (B, S_total, d), aux_loss, n_prefix). Caller unembeds.
+
+    segment_ids (B, S) int32 turns on packed (varlen) training: attention
+    stays within segments and RoPE positions restart at each segment start.
+    Incompatible with patches/meta-token prefixes (no prefix in packed rows).
+    """
     h, positions, n_prefix = _embed_inputs(cfg, params, tokens, patches)
-    h, aux = _run_groups(cfg, params, h, positions, attn_cfg)
+    if segment_ids is not None:
+        assert n_prefix == 0, "packed mode does not support prefix tokens"
+        assert not cfg.learned_pos_embed, "packed mode needs RoPE positions"
+        positions = masks_mod.segment_positions(segment_ids)
+    h, aux = _run_groups(cfg, params, h, positions, attn_cfg, segment_ids)
     h = L.apply_norm(params["ln_f"], h, cfg.norm_eps, cfg.norm)
     return h, aux, n_prefix
 

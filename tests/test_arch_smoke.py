@@ -20,6 +20,21 @@ ARCHS = registry.names()
 ATTN = AttentionConfig(impl="flash_xla", block_q=64, block_kv=64, decode_splits=2)
 B, S = 2, 64
 
+# Fast tier keeps one dense-GQA and one MoE representative; the heavy /
+# exotic families (hybrid, SSM, enc-dec, VLM, big-window) run in `-m slow`.
+_SLOW_TRAIN = {
+    "whisper-base", "mixtral-8x22b", "gemma3-1b", "deepseek-coder-33b",
+    "stablelm-12b", "falcon-mamba-7b", "internvl2-76b", "hymba-1.5b",
+}
+_SLOW_SERVE = {"gemma3-1b", "hymba-1.5b", "falcon-mamba-7b", "internvl2-76b"}
+
+
+def _tiered(names, slow_set):
+    return [
+        pytest.param(a, marks=pytest.mark.slow) if a in slow_set else a
+        for a in names
+    ]
+
 
 def _params_and_batch(cfg):
     if cfg.family == "encdec":
@@ -44,7 +59,7 @@ def test_full_config_validates(arch):
     assert cfg.num_layers == len(cfg.layer_kinds())
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _tiered(ARCHS, _SLOW_TRAIN))
 def test_train_step_smoke(arch):
     cfg = registry.reduce_config(registry.get(arch))
     params, batch = _params_and_batch(cfg)
@@ -58,7 +73,10 @@ def test_train_step_smoke(arch):
     assert all(bool(jnp.isfinite(x).all()) for x in leaves), f"{arch}: non-finite params"
 
 
-@pytest.mark.parametrize("arch", [a for a in ARCHS if registry.get(a).family != "encdec"])
+@pytest.mark.parametrize(
+    "arch",
+    _tiered([a for a in ARCHS if registry.get(a).family != "encdec"], _SLOW_SERVE),
+)
 def test_prefill_decode_smoke(arch):
     cfg = registry.reduce_config(registry.get(arch))
     params, batch = _params_and_batch(cfg)

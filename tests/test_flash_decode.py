@@ -27,7 +27,9 @@ def data():
 
 
 @pytest.mark.parametrize("impl", ["xla", "pallas"])
-@pytest.mark.parametrize("splits", [1, 4, 8, 16])
+@pytest.mark.parametrize(
+    "splits", [1, pytest.param(4, marks=pytest.mark.slow), 8, 16]
+)
 def test_decode_matches_ref(data, impl, splits):
     q, kc, vc, lens = data
     fn = flash_decode if impl == "xla" else flash_decode_pallas

@@ -28,6 +28,35 @@ def _mk(B, Sq, Sk, Hq, Hk, D, dtype):
     )
 
 
+@pytest.fixture(scope="module")
+def mk_cache():
+    """Share (q, k, v, do) across the sweep's spec axis (3x fewer RNG+device
+    rounds) -- tests must not mutate the arrays."""
+    cache = {}
+
+    def get(*shape_dtype):
+        if shape_dtype not in cache:
+            cache[shape_dtype] = _mk(*shape_dtype)
+        return cache[shape_dtype]
+
+    return get
+
+
+@pytest.fixture(scope="module")
+def ref_cache(mk_cache):
+    """Share the dense-oracle (o, lse) per (shape, spec) across tests."""
+    cache = {}
+
+    def get(shape, spec, dtype=jnp.float32):
+        key = (shape, spec, dtype)
+        if key not in cache:
+            q, k, v, _ = mk_cache(*shape, dtype)
+            cache[key] = attention_reference(q, k, v, spec)
+        return cache[key]
+
+    return get
+
+
 SHAPES = [
     (2, 128, 128, 4, 4, 64),
     (2, 128, 128, 4, 2, 64),
@@ -36,15 +65,21 @@ SHAPES = [
     (1, 256, 256, 2, 2, 128),  # d=128
 ]
 SPECS = [MaskSpec(causal=True), MaskSpec(), MaskSpec(causal=True, window=64)]
+# Fast tier: every shape under causal, the canonical shapes under the other
+# specs; the full cross-product runs with -m slow.
+_SWEEP = [
+    pytest.param(s, i, marks=pytest.mark.slow) if (i > 0 and si >= 3) else (s, i)
+    for i in range(len(SPECS))
+    for si, s in enumerate(SHAPES)
+]
 
 
-@pytest.mark.parametrize("shape", SHAPES, ids=[str(s) for s in SHAPES])
-@pytest.mark.parametrize("spec_i", range(len(SPECS)))
-def test_fwd_sweep(shape, spec_i):
+@pytest.mark.parametrize("shape,spec_i", _SWEEP, ids=[f"{i}-{s}" for i in range(len(SPECS)) for s in SHAPES])
+def test_fwd_sweep(shape, spec_i, mk_cache, ref_cache):
     B, Sq, Sk, Hq, Hk, D = shape
     spec = SPECS[spec_i]
-    q, k, v, _ = _mk(B, Sq, Sk, Hq, Hk, D, jnp.float32)
-    o_ref, lse_ref = attention_reference(q, k, v, spec)
+    q, k, v, _ = mk_cache(B, Sq, Sk, Hq, Hk, D, jnp.float32)
+    o_ref, lse_ref = ref_cache(shape, spec)
     o, lse = flash_attention_pallas_with_lse(q, k, v, spec, block_q=64, block_kv=64)
     np.testing.assert_allclose(o, o_ref, atol=3e-5, rtol=1e-4)
     mask = ~np.isneginf(np.asarray(lse_ref))
@@ -56,12 +91,12 @@ def test_fwd_sweep(shape, spec_i):
 @pytest.mark.parametrize("spec", [
     MaskSpec(causal=True),
     MaskSpec(causal=True, window=64),
-    MaskSpec(causal=True, window=64, sink=16),
-    MaskSpec(),
+    pytest.param(MaskSpec(causal=True, window=64, sink=16), marks=pytest.mark.slow),
+    pytest.param(MaskSpec(), marks=pytest.mark.slow),
 ], ids=["causal", "window", "sink", "full"])
-def test_bwd_sweep(spec):
+def test_bwd_sweep(spec, mk_cache):
     B, Sq, Sk, Hq, Hk, D = 2, 192, 192, 4, 2, 32
-    q, k, v, do = _mk(B, Sq, Sk, Hq, Hk, D, jnp.float32)
+    q, k, v, do = mk_cache(B, Sq, Sk, Hq, Hk, D, jnp.float32)
     f = lambda q, k, v: (flash_attention_pallas(q, k, v, spec, block_q=64, block_kv=64) * do).sum()
     g = lambda q, k, v: (attention_reference(q, k, v, spec)[0] * do).sum()
     for a, b in zip(jax.grad(f, (0, 1, 2))(q, k, v), jax.grad(g, (0, 1, 2))(q, k, v)):
@@ -69,17 +104,18 @@ def test_bwd_sweep(spec):
 
 
 @pytest.mark.parametrize("bq,bk", [(32, 64), (64, 32), (128, 128)])
-def test_block_size_invariance(bq, bk):
+def test_block_size_invariance(bq, bk, mk_cache, ref_cache):
     """Output must be exactly invariant to the tile schedule."""
-    q, k, v, _ = _mk(1, 256, 256, 2, 2, 64, jnp.float32)
+    shape = (1, 256, 256, 2, 2, 64)
+    q, k, v, _ = mk_cache(*shape, jnp.float32)
     spec = MaskSpec(causal=True)
-    o_ref, _ = attention_reference(q, k, v, spec)
+    o_ref, _ = ref_cache(shape, spec)
     o = flash_attention_pallas(q, k, v, spec, block_q=bq, block_kv=bk)
     np.testing.assert_allclose(o, o_ref, atol=3e-5, rtol=1e-4)
 
 
-def test_bf16_kernel():
-    q, k, v, _ = _mk(2, 128, 128, 4, 2, 64, jnp.bfloat16)
+def test_bf16_kernel(mk_cache):
+    q, k, v, _ = mk_cache(2, 128, 128, 4, 2, 64, jnp.bfloat16)
     spec = MaskSpec(causal=True)
     o_ref, _ = attention_reference(q, k, v, spec)
     o = flash_attention_pallas(q, k, v, spec, block_q=64, block_kv=64)
@@ -100,10 +136,10 @@ def test_chunked_prefill_offset():
     np.testing.assert_allclose(o_chunk, o_full[:, 128:], atol=3e-5, rtol=1e-4)
 
 
-def test_pallas_matches_xla_flash_exactly_same_blocks():
+def test_pallas_matches_xla_flash_exactly_same_blocks(mk_cache):
     from repro.core.flash import flash_attention as flash_xla
 
-    q, k, v, _ = _mk(2, 128, 128, 4, 2, 64, jnp.float32)
+    q, k, v, _ = mk_cache(2, 128, 128, 4, 2, 64, jnp.float32)
     spec = MaskSpec(causal=True)
     o_p = flash_attention_pallas(q, k, v, spec, block_q=64, block_kv=64)
     o_x = flash_xla(q, k, v, spec, block_q=64, block_kv=64)

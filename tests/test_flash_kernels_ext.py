@@ -37,7 +37,7 @@ def _grads_match(f, g, args, atol=1e-3, rtol=1e-3):
 @pytest.mark.parametrize("mode", ["dense", "packed"])
 @pytest.mark.parametrize("spec", [
     MaskSpec(causal=True),
-    MaskSpec(),
+    pytest.param(MaskSpec(), marks=pytest.mark.slow),
     MaskSpec(causal=True, window=48),
 ], ids=["causal", "full", "window"])
 def test_xla_bwd_both_modes(mode, spec):
@@ -50,6 +50,7 @@ def test_xla_bwd_both_modes(mode, spec):
     _grads_match(f, g, (q, k, v))
 
 
+@pytest.mark.slow
 def test_mqa_extreme():
     """Hk=1 (whisper-style MQA limit of GQA)."""
     q, k, v, do = _mk(2, 128, 128, 8, 1, 32)
@@ -62,6 +63,7 @@ def test_mqa_extreme():
     _grads_match(f, g, (q, k, v))
 
 
+@pytest.mark.slow
 def test_cross_attention_asymmetric_grads():
     """Whisper decoder cross-attn: Nq != Nkv, non-causal, with grads
     through both the XLA and Pallas paths."""
@@ -84,6 +86,7 @@ def test_short_query_long_kv():
     np.testing.assert_allclose(o_x, o_ref, atol=3e-5, rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_bf16_backward():
     q, k, v, do = _mk(1, 128, 128, 2, 2, 64, jnp.bfloat16)
     spec = MaskSpec(causal=True)

@@ -13,6 +13,9 @@ P6  softmax shift invariance: adding a constant to all scores of a row
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import online_softmax as osm

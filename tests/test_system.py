@@ -18,6 +18,7 @@ from repro.training.optimizer import AdamWConfig, init_opt_state
 ATTN = AttentionConfig(impl="flash_xla", block_q=64, block_kv=64)
 
 
+@pytest.mark.slow
 def test_training_learns(tmp_path):
     cfg = PRESETS["gpt-20m"]
     loop = TrainLoopConfig(steps=25, seq_len=64, batch_size=4,
@@ -26,6 +27,18 @@ def test_training_learns(tmp_path):
     assert np.mean(hist["loss"][-3:]) < np.mean(hist["loss"][:3]) - 0.1
 
 
+def test_packed_training_learns(tmp_path):
+    """Varlen packed batches: loss drops AND the loss mask keeps padding /
+    cross-segment boundaries out of the objective."""
+    cfg = PRESETS["gpt-20m"]
+    loop = TrainLoopConfig(steps=12, seq_len=64, batch_size=4,
+                           ckpt_dir=None, log_every=100, packed=True)
+    _, _, hist = train(cfg, loop, AdamWConfig(lr=2e-3, warmup_steps=4, total_steps=12))
+    assert np.isfinite(hist["loss"]).all()
+    assert np.mean(hist["loss"][-3:]) < np.mean(hist["loss"][:3])
+
+
+@pytest.mark.slow
 def test_restart_resumes_exactly(tmp_path):
     """Train 8 steps straight vs 4 + restore + 4: identical final loss."""
     cfg = PRESETS["gpt-20m"]
