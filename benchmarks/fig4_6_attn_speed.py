@@ -27,7 +27,8 @@ SEQS = (256, 512, 1024, 2048)
 
 
 def _time(fn: Callable, *args, iters: int = 3) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    # warmup (compile) once; jax.block_until_ready handles pytrees/tuples.
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
@@ -43,16 +44,46 @@ def _flops(seq: int, batch: int, causal: bool, bwd: bool) -> float:
     return f
 
 
+def _mk_qkv(key, seq: int, batch: int):
+    kq, kk, kv = jax.random.split(key, 3)
+    shape = (batch, seq, HEADS, HEAD_DIM)
+    return (
+        jax.random.normal(kq, shape, jnp.float32),
+        jax.random.normal(kk, shape, jnp.float32),
+        jax.random.normal(kv, shape, jnp.float32),
+    )
+
+
+def _time_pair(
+    csv: List[str], names, cfg: AttentionConfig, spec: MaskSpec,
+    q, k, v, seq: int, batch: int, causal: bool,
+) -> None:
+    """Time fwd and fwd+bwd for one config; append one CSV row each.
+
+    names = (fwd_row_name, fwdbwd_row_name) -- everything left of the first
+    comma in the emitted rows.
+    """
+    fwd = jax.jit(lambda q, k, v, cfg=cfg: attention(q, k, v, spec, cfg))
+    t_f = _time(fwd, q, k, v)
+    csv.append(
+        f"{names[0]},{t_f*1e6:.0f},{_flops(seq, batch, causal, False)/t_f/1e12:.4f} TFLOP/s"
+    )
+    loss = jax.jit(
+        jax.grad(lambda q, k, v, cfg=cfg: attention(q, k, v, spec, cfg).sum())
+    )
+    t_b = _time(loss, q, k, v)
+    csv.append(
+        f"{names[1]},{t_b*1e6:.0f},{_flops(seq, batch, causal, True)/t_b/1e12:.4f} TFLOP/s"
+    )
+
+
 def run(csv: List[str]) -> None:
     key = jax.random.PRNGKey(0)
     for causal in (False, True):
         spec = MaskSpec(causal=causal)
         for seq in SEQS:
             batch = max(1, TOKENS // seq)
-            kq, kk, kv = jax.random.split(jax.random.fold_in(key, seq), 3)
-            q = jax.random.normal(kq, (batch, seq, HEADS, HEAD_DIM), jnp.float32)
-            k = jax.random.normal(kk, (batch, seq, HEADS, HEAD_DIM), jnp.float32)
-            v = jax.random.normal(kv, (batch, seq, HEADS, HEAD_DIM), jnp.float32)
+            q, k, v = _mk_qkv(jax.random.fold_in(key, seq), seq, batch)
             for impl in ("ref", "flash_xla", "flash_pallas"):
                 if impl == "flash_pallas" and seq > 512:
                     continue  # interpret-mode python loop: keep it tractable
@@ -60,19 +91,35 @@ def run(csv: List[str]) -> None:
                     impl=impl, block_q=128, block_kv=128,
                     mode="packed" if causal else "dense",
                 )
-
-                fwd = jax.jit(lambda q, k, v, cfg=cfg: attention(q, k, v, spec, cfg))
-                t_f = _time(fwd, q, k, v)
-                csv.append(
-                    f"fig5_fwd/{impl}/causal={int(causal)}/seq={seq},"
-                    f"{t_f*1e6:.0f},{_flops(seq, batch, causal, False)/t_f/1e12:.4f} TFLOP/s"
+                tag = f"{impl}/causal={int(causal)}/seq={seq}"
+                _time_pair(
+                    csv, (f"fig5_fwd/{tag}", f"fig4_fwdbwd/{tag}"),
+                    cfg, spec, q, k, v, seq, batch, causal,
                 )
 
-                loss = jax.jit(
-                    jax.grad(lambda q, k, v, cfg=cfg: attention(q, k, v, spec, cfg).sum())
-                )
-                t_b = _time(loss, q, k, v)
-                csv.append(
-                    f"fig4_fwdbwd/{impl}/causal={int(causal)}/seq={seq},"
-                    f"{t_b*1e6:.0f},{_flops(seq, batch, causal, True)/t_b/1e12:.4f} TFLOP/s"
-                )
+    schedule_comparison(csv, key)
+
+
+def schedule_comparison(csv: List[str], key=None) -> None:
+    """Compact-vs-dense Pallas tile schedule (FA2 Section 3.1 partitioning).
+
+    Causal at a fixed small shape (interpret mode makes each grid step a
+    Python-level kernel invocation, so the visited-step count is exactly
+    what this measures): the compact schedule visits ~(t+1)/2t of the dense
+    steps and must not regress on fwd or fwd+bwd. Also exposed as the
+    ``sched_cmp`` benchmark module for the CI fast-tier smoke.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    seq, batch = 256, max(1, TOKENS // 256)
+    spec = MaskSpec(causal=True)
+    q, k, v = _mk_qkv(jax.random.fold_in(key, 7), seq, batch)
+    for schedule in ("dense", "compact"):
+        cfg = AttentionConfig(
+            impl="flash_pallas", block_q=64, block_kv=64, schedule=schedule
+        )
+        tag = f"flash_pallas/schedule={schedule}/causal=1/seq={seq}"
+        _time_pair(
+            csv, (f"sched_cmp_fwd/{tag}", f"sched_cmp_fwdbwd/{tag}"),
+            cfg, spec, q, k, v, seq, batch, True,
+        )

@@ -1,23 +1,58 @@
 """Benchmark harness: one module per paper table/figure.
 
   fig4_6_attn_speed   Fig. 4/5/6 -- attention speed, 3 impls x seq len
+                      (+ compact-vs-dense Pallas tile-schedule comparison)
+  sched_cmp           the schedule comparison alone (CI fast-tier smoke;
+                      not in ALL -- fig4_6_attn_speed already includes it)
   nonmatmul_census    Section 3.1 C1 -- FA1-vs-FA2 non-matmul FLOP census
   table1_e2e          Table 1 -- end-to-end GPT training throughput
   roofline            deliverable (g) -- dry-run roofline table
 
-Prints ``name,us_per_call,derived`` CSV. ``python -m benchmarks.run [names]``
+Prints ``name,us_per_call,derived`` CSV.
+
+    python -m benchmarks.run [--json PATH] [names]
+
+``--json PATH`` additionally writes the rows as machine-readable records
+``{"bench", "config", "us_per_call", "derived"}`` (the perf trajectory file
+committed as BENCH_attn.json; CI runs a fast-tier smoke of it).
 """
 
 from __future__ import annotations
 
+import json
 import sys
 import time
 
 ALL = ("fig4_6_attn_speed", "nonmatmul_census", "table1_e2e", "roofline")
 
 
+def _records(csv_rows):
+    """CSV rows ('bench/config...,us,derived') -> list of dict records."""
+    records = []
+    for row in csv_rows:
+        name, _, rest = row.partition(",")
+        us, _, derived = rest.partition(",")
+        bench, _, config = name.partition("/")
+        try:
+            us_val = float(us)
+        except ValueError:
+            us_val = None
+        records.append(
+            dict(bench=bench, config=config, us_per_call=us_val, derived=derived)
+        )
+    return records
+
+
 def main() -> None:
-    names = sys.argv[1:] or list(ALL)
+    args = sys.argv[1:]
+    json_path = None
+    if "--json" in args:
+        i = args.index("--json")
+        if i + 1 >= len(args):
+            sys.exit("usage: python -m benchmarks.run [--json PATH] [names]")
+        json_path = args[i + 1]
+        args = args[:i] + args[i + 2:]
+    names = args or list(ALL)
     csv = ["name,us_per_call,derived"]
     for name in names:
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
@@ -27,6 +62,10 @@ def main() -> None:
         dt = time.perf_counter() - t0
         print(f"# {name}: {len(csv) - before} rows in {dt:.1f}s", file=sys.stderr)
     print("\n".join(csv))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(_records(csv[1:]), f, indent=1)
+        print(f"# wrote {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,18 @@
+"""Compact-vs-dense Pallas tile-schedule comparison, standalone.
+
+The CI fast-tier benchmark smoke: runs ONLY the ``sched_cmp_*`` rows of
+fig4_6_attn_speed (a few tens of seconds in interpret mode) instead of the
+full seq x impl sweep. ``python -m benchmarks.run --json BENCH_attn.json
+sched_cmp``. Not in ``run.ALL`` -- the full fig4_6 module already emits
+these rows, so running both would duplicate them.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.fig4_6_attn_speed import schedule_comparison
+
+
+def run(csv: List[str]) -> None:
+    schedule_comparison(csv)

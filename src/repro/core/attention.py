@@ -5,7 +5,8 @@ the backend is selected by config, never by model code:
 
   impl = 'ref'           naive O(N^2)-memory attention (oracle / paper baseline)
   impl = 'flash_xla'     FA2 algorithm as XLA scans (CPU + dry-run path)
-  impl = 'flash_pallas'  FA2 Pallas TPU kernel (interpret=True on CPU)
+  impl = 'flash_pallas'  FA2 Pallas TPU kernel (interpret mode auto-enables
+                         off-TPU; kernels/compat.resolve_interpret)
 
 All three are exact and interchangeable; tests assert pairwise agreement.
 """
@@ -28,8 +29,11 @@ class AttentionConfig:
     block_q: int = 512
     block_kv: int = 512
     mode: str = "auto"  # tile schedule for flash_xla: 'dense' | 'packed' | 'auto'
+    schedule: str = "compact"  # tile schedule for flash_pallas: 'compact' | 'dense'
     decode_splits: int = 8
-    interpret: bool = True  # Pallas interpret mode (True on CPU, False on TPU)
+    # Pallas interpret mode: None = auto (off on real TPUs, on elsewhere --
+    # resolved in one place, kernels/compat.resolve_interpret).
+    interpret: Optional[bool] = None
 
 
 def attention(
@@ -62,13 +66,13 @@ def attention(
 
             return flash_attention_pallas_varlen(
                 q, k, v, segment_ids, spec, scale=scale, block_q=cfg.block_q,
-                block_kv=cfg.block_kv, interpret=cfg.interpret,
+                block_kv=cfg.block_kv, interpret=cfg.interpret, schedule=cfg.schedule,
             )
         from repro.kernels.ops import flash_attention_pallas
 
         return flash_attention_pallas(
             q, k, v, spec, scale=scale, block_q=cfg.block_q, block_kv=cfg.block_kv,
-            interpret=cfg.interpret,
+            interpret=cfg.interpret, schedule=cfg.schedule,
         )
     raise ValueError(f"unknown attention impl: {cfg.impl}")
 

@@ -86,6 +86,11 @@ def _visible_pairs(
 ):
     """Static (i, j) tile pairs that are not fully masked (row-major).
 
+    This is the SHARED SCHEDULE ORACLE (DESIGN.md Section 2.1): the XLA
+    packed mode scans exactly these pairs, the Pallas compact schedules
+    (kernels/schedule.py) assert their active step count equals this count
+    at build time, and the kernels' CostEstimates charge these tiles.
+
     segments: optional concrete (numpy) segment ids -- either a single
     (Sq,) vector (packed self-attention) or a (q_segs, kv_segs) pair. A
     tile whose every (q, kv) pair crosses a segment boundary is dropped in

@@ -1,14 +1,29 @@
-"""Version shims for the Pallas TPU API surface.
+"""Version + backend shims for the Pallas TPU API surface.
 
 jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and
 back-compat aliases come and go between releases); the kernels only ever
 need "the dataclass that accepts dimension_semantics". Resolve it once here
 so flash_fwd / flash_bwd / flash_decode are version-agnostic.
+
+``resolve_interpret`` is the single place where ``interpret=None`` (the
+default everywhere: ops.py, AttentionConfig, kernel entry points) becomes a
+concrete bool: interpret off on real TPUs, on everywhere else. Callers that
+pass an explicit bool keep full control (tests, benchmarks).
 """
 
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
 from jax.experimental.pallas import tpu as pltpu
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None -> 'not on a TPU'; an explicit bool passes through unchanged."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
 
 if hasattr(pltpu, "CompilerParams"):
     CompilerParams = pltpu.CompilerParams

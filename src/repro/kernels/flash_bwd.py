@@ -5,25 +5,35 @@ backward over *column* (KV) blocks, with thread blocks doing **atomic adds**
 into dQ. TPUs have no HBM atomics, so we split into two kernels -- the
 standard TPU flash scheme:
 
-  * ``dkv`` kernel -- grid (B*Hkv, Tkv, G, Tq): each (bh, j) owns one KV
-    block (the paper's column-block worker, Fig. 2 right); the inner
-    sequential (g, i) axes stream Q/dO blocks past it, accumulating dK_j,
-    dV_j in VMEM scratch (Algorithm 2 lines 12, 16) -- and summing over the
-    GQA group g, the paper's "sum dK/dV across duplicated heads".
-  * ``dq`` kernel -- grid (B*Hq, Tq, Tkv): each (bh, i) owns one Q block;
-    the inner KV loop accumulates dQ_i in scratch (line 15). This replaces
-    the atomic-add cross-worker communication with a second pass that
-    recomputes S -- extra *matmul* FLOPs in exchange for zero communication,
-    which is the paper's own trade (matmul FLOPs are ~16x cheaper).
+  * ``dkv`` kernel -- each (bh, j) owns one KV block (the paper's column-
+    block worker, Fig. 2 right); the sequential axes stream Q/dO blocks past
+    it, accumulating dK_j, dV_j in VMEM scratch (Algorithm 2 lines 12, 16)
+    -- and summing over the GQA group g, the paper's "sum dK/dV across
+    duplicated heads".
+  * ``dq`` kernel -- each (bh, i) owns one Q block; the inner KV loop
+    accumulates dQ_i in scratch (line 15). This replaces the atomic-add
+    cross-worker communication with a second pass that recomputes S -- extra
+    *matmul* FLOPs in exchange for zero communication, which is the paper's
+    own trade (matmul FLOPs are ~16x cheaper).
+
+Both kernels support two schedules (see flash_fwd.py / kernels/schedule.py):
+``"compact"`` (default) flattens the visible tile pairs into a scalar-
+prefetched table -- kv-major for dkv (grid ``(BHk, n_steps, G)``), q-major
+for dq (grid ``(BH, n_steps)``) -- so masked-out tiles cost no grid steps
+and no DMAs; ``"dense"`` is the legacy visit-everything grid.
 
 Both kernels recompute P = exp(S - L) from the logsumexp only (C1b, line 11).
-D = rowsum(dO o O) (line 4) is precomputed in ops.py (one fused elementwise
-pass). Layouts as in flash_fwd.py; lse/delta are (BH, Sq, LANES)-broadcast.
+Softmax statistics arrive LANE-MAJOR: lse and delta are ``(BH, Sqp)`` f32
+with the sequence on the 128-lane axis (BlockSpec ``(1, block_q)``) -- the
+memory-diet contract shared with flash_fwd.py. D = rowsum(dO o O) (line 4)
+is computed by :func:`flash_bwd_delta`, a one-pass Pallas kernel, instead of
+an XLA elementwise pass over the broadcast layout.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,16 +41,62 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.masks import DEFAULT_MASK_VALUE, MaskSpec
-from repro.kernels.compat import CompilerParams
-from repro.kernels.flash_fwd import LANES, _tile_mask, _visibility
+from repro.kernels.compat import CompilerParams, resolve_interpret
+from repro.kernels.flash_fwd import _tile_mask, _visibility
+from repro.kernels.schedule import (
+    build_tile_schedule,
+    decode_step_bits,
+    segment_step_tables,
+)
 
 
-def _recompute_p(q, k, lse, spec, i, j, bq, bk, kv_valid, q_seg=None, kv_seg=None):
+def _recompute_p(q, k, lse, spec, i, j, bq, bk, kv_valid, needs_mask,
+                 q_seg=None, kv_seg=None):
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    _, needs_mask = _visibility(spec, i, j, bq, bk, kv_valid, q_seg, kv_seg)
     mask = _tile_mask(spec, i, j, bq, bk, kv_valid, q_seg, kv_seg)
     s = jnp.where(jnp.logical_or(~needs_mask, mask), s, DEFAULT_MASK_VALUE)
     return jnp.exp(s - lse), s
+
+
+# ---------------------------------------------------------------------------
+# delta = rowsum(dO o O) preprocess (Algorithm 2 line 4)
+# ---------------------------------------------------------------------------
+
+
+def _delta_kernel(o_ref, do_ref, delta_ref):
+    delta_ref[0] = jnp.sum(
+        o_ref[0].astype(jnp.float32) * do_ref[0].astype(jnp.float32), axis=-1
+    )
+
+
+def flash_bwd_delta(o, do, *, block_q: int, interpret: Optional[bool] = None):
+    """rowsum(dO o O) over prepped (BH, Sqp, D) tensors -> (BH, Sqp) f32.
+
+    One fused read of O and dO per tile, emitting the lane-major delta the
+    backward kernels consume directly (no 128x broadcast round-trip).
+    """
+    interpret = resolve_interpret(interpret)
+    BH, Sqp, D = o.shape
+    assert Sqp % block_q == 0
+    spec = pl.BlockSpec((1, block_q, D), lambda bh, i: (bh, i, 0))
+    return pl.pallas_call(
+        _delta_kernel,
+        grid=(BH, Sqp // block_q),
+        in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((1, block_q), lambda bh, i: (bh, i)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sqp), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        cost_estimate=pl.CostEstimate(
+            flops=2 * o.size,
+            bytes_accessed=o.size * o.dtype.itemsize
+            + do.size * do.dtype.itemsize + BH * Sqp * 4,
+            transcendentals=0,
+        ),
+        interpret=interpret,
+        name="fa2_bwd_delta",
+    )(o, do)
 
 
 # ---------------------------------------------------------------------------
@@ -48,7 +104,37 @@ def _recompute_p(q, k, lse, spec, i, j, bq, bk, kv_valid, q_seg=None, kv_seg=Non
 # ---------------------------------------------------------------------------
 
 
-def _dkv_kernel(
+def _dkv_compute(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                 dk_scr, dv_scr, spec, i, j, bq, bk, kv_valid, needs_mask,
+                 q_seg, kv_seg):
+    q = q_ref[0]      # (bq, d), pre-scaled
+    k = k_ref[0]      # (bk, d)
+    v = v_ref[0]
+    do = do_ref[0]    # (bq, d)
+    lse = lse_ref[0][:, None]    # (bq, 1), lane-major source
+    delta = delta_ref[0][:, None]
+    p, _ = _recompute_p(
+        q, k, lse, spec, i, j, bq, bk, kv_valid, needs_mask, q_seg, kv_seg
+    )  # line 11
+    # dV_j += P^T dO_i                                          (line 12)
+    dv_scr[...] += jax.lax.dot_general(
+        p.astype(do.dtype), do, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # dP = dO_i V_j^T                                           (line 13)
+    dp = jax.lax.dot_general(
+        do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    # dS = P o (dP - D_i)                                       (line 14)
+    ds = p * (dp - delta)
+    # dK_j += dS^T Q_i  (q pre-scaled => scale already folded)  (line 16)
+    dk_scr[...] += jax.lax.dot_general(
+        ds.astype(q.dtype), q, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _dkv_kernel_dense(
     *refs,
     spec: MaskSpec, bq: int, bk: int, t_q: int, group: int, kv_valid: int,
     has_segments: bool = False,
@@ -70,37 +156,56 @@ def _dkv_kernel(
         dk_scr[...] = jnp.zeros_like(dk_scr)
         dv_scr[...] = jnp.zeros_like(dv_scr)
 
-    empty, _ = _visibility(spec, i, j, bq, bk, kv_valid, q_seg, kv_seg)
+    empty, needs_mask = _visibility(spec, i, j, bq, bk, kv_valid, q_seg, kv_seg)
 
     @pl.when(~empty)
     def _compute():
-        q = q_ref[0]      # (bq, d), pre-scaled
-        k = k_ref[0]      # (bk, d)
-        v = v_ref[0]
-        do = do_ref[0]    # (bq, d)
-        lse = lse_ref[0][:, :1]    # (bq, 1)
-        delta = delta_ref[0][:, :1]
-        p, _ = _recompute_p(
-            q, k, lse, spec, i, j, bq, bk, kv_valid, q_seg, kv_seg
-        )  # line 11
-        # dV_j += P^T dO_i                                          (line 12)
-        dv_scr[...] += jax.lax.dot_general(
-            p.astype(do.dtype), do, (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-        # dP = dO_i V_j^T                                           (line 13)
-        dp = jax.lax.dot_general(
-            do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        )
-        # dS = P o (dP - D_i)                                       (line 14)
-        ds = p * (dp - delta)
-        # dK_j += dS^T Q_i  (q pre-scaled => scale already folded)  (line 16)
-        dk_scr[...] += jax.lax.dot_general(
-            ds.astype(q.dtype), q, (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
+        _dkv_compute(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                     dk_scr, dv_scr, spec, i, j, bq, bk, kv_valid, needs_mask,
+                     q_seg, kv_seg)
 
     @pl.when(jnp.logical_and(g == group - 1, i == t_q - 1))
+    def _emit():
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def _dkv_kernel_compact(
+    *refs,
+    spec: MaskSpec, bq: int, bk: int, group: int, kv_valid: int, heads: int,
+    has_segments: bool = False,
+):
+    if has_segments:
+        (outer_ref, inner_ref, flags_ref, seg_ref,
+         q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qs_ref, ks_ref,
+         dk_ref, dv_ref, dk_scr, dv_scr) = refs
+        q_seg, kv_seg = qs_ref[0], ks_ref[0]
+    else:
+        (outer_ref, inner_ref, flags_ref,
+         q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+         dk_ref, dv_ref, dk_scr, dv_scr) = refs
+        q_seg = kv_seg = None
+    bh = pl.program_id(0)
+    s = pl.program_id(1)
+    g = pl.program_id(2)
+    j = outer_ref[s]  # kv-major: the owned KV tile
+    i = inner_ref[s]  # streamed Q tile
+    active, first, last, needs_mask = decode_step_bits(
+        flags_ref[s], seg_ref[bh // heads, s] if has_segments else None
+    )
+
+    @pl.when(jnp.logical_and(first, g == 0))
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    @pl.when(active)
+    def _compute():
+        _dkv_compute(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                     dk_scr, dv_scr, spec, i, j, bq, bk, kv_valid, needs_mask,
+                     q_seg, kv_seg)
+
+    @pl.when(jnp.logical_and(last, g == group - 1))
     def _emit():
         dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
         dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
@@ -109,62 +214,130 @@ def _dkv_kernel(
 def flash_bwd_dkv(
     q, k, v, do, lse, delta, spec: MaskSpec, *,
     group: int, block_q: int, block_kv: int, kv_valid: int,
-    q_seg=None, kv_seg=None, interpret: bool = True,
+    q_seg=None, kv_seg=None, interpret: Optional[bool] = None,
+    schedule: str = "compact",
 ):
-    """Returns (dk, dv) in (BHk, Skp, D) fp32. q pre-scaled by 1/sqrt(d)."""
+    """Returns (dk, dv) in (BHk, Skp, D) fp32. q pre-scaled by 1/sqrt(d).
+
+    lse/delta are lane-major (BH, Sqp) f32; segment ids (if any) are
+    unreplicated (B, Sqp)/(B, Skp).
+    """
+    interpret = resolve_interpret(interpret)
     BH, Sq, D = q.shape
     BHk, Skp, _ = k.shape
     t_q, t_kv = Sq // block_q, Skp // block_kv
-    grid = (BHk, t_kv, group, t_q)
     has_segments = q_seg is not None
-    kernel = functools.partial(
-        _dkv_kernel, spec=spec, bq=block_q, bk=block_kv, t_q=t_q, group=group,
-        kv_valid=kv_valid, has_segments=has_segments,
-    )
     from repro.core.flash import _visible_pairs
 
     n_vis = len(_visible_pairs(spec, t_q, t_kv, block_q, block_kv)[0])
     cost = pl.CostEstimate(
         flops=BH * n_vis * 2 * block_q * block_kv * D * 3,  # 3 matmuls here
         bytes_accessed=2 * k.size * k.dtype.itemsize
-        + BHk * t_kv * group * t_q * 2 * block_q * D * q.dtype.itemsize,
+        + BH * n_vis * 2 * block_q * D * q.dtype.itemsize,
         transcendentals=BH * n_vis * block_q * block_kv,
     )
+    out_shape = [
+        jax.ShapeDtypeStruct((BHk, Skp, D), jnp.float32),
+        jax.ShapeDtypeStruct((BHk, Skp, D), jnp.float32),
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((block_kv, D), jnp.float32),
+        pltpu.VMEM((block_kv, D), jnp.float32),
+    ]
+
+    if schedule == "dense":
+        kernel = functools.partial(
+            _dkv_kernel_dense, spec=spec, bq=block_q, bk=block_kv, t_q=t_q,
+            group=group, kv_valid=kv_valid, has_segments=has_segments,
+        )
+        qspec = pl.BlockSpec(
+            (1, block_q, D), lambda bh, j, g, i, grp=group: (bh * grp + g, i, 0)
+        )
+        lspec = pl.BlockSpec(
+            (1, block_q), lambda bh, j, g, i, grp=group: (bh * grp + g, i)
+        )
+        kvspec = pl.BlockSpec((1, block_kv, D), lambda bh, j, g, i: (bh, j, 0))
+        in_specs = [qspec, kvspec, kvspec, qspec, lspec, lspec]
+        inputs = [q, k, v, do, lse, delta]
+        if has_segments:
+            heads = BHk // q_seg.shape[0]
+            in_specs += [
+                pl.BlockSpec((1, block_q), lambda bh, j, g, i, h=heads: (bh // h, i)),
+                pl.BlockSpec((1, block_kv), lambda bh, j, g, i, h=heads: (bh // h, j)),
+            ]
+            inputs += [q_seg, kv_seg]
+        return pl.pallas_call(
+            kernel,
+            grid=(BHk, t_kv, group, t_q),
+            in_specs=in_specs,
+            out_specs=[kvspec, kvspec],
+            out_shape=out_shape,
+            scratch_shapes=scratch_shapes,
+            compiler_params=CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary", "arbitrary"),
+            ),
+            cost_estimate=cost,
+            interpret=interpret,
+            name="fa2_bwd_dkv_varlen" if has_segments else "fa2_bwd_dkv",
+        )(*inputs)
+
+    if schedule != "compact":
+        raise ValueError(f"unknown tile schedule: {schedule!r}")
+    sched = build_tile_schedule(
+        spec, t_q, t_kv, block_q, block_kv, kv_valid, kv_major=True
+    )
+    heads = BHk // q_seg.shape[0] if has_segments else 1
+    kernel = functools.partial(
+        _dkv_kernel_compact, spec=spec, bq=block_q, bk=block_kv, group=group,
+        kv_valid=kv_valid, heads=heads, has_segments=has_segments,
+    )
     qspec = pl.BlockSpec(
-        (1, block_q, D), lambda bh, j, g, i, grp=group: (bh * grp + g, i, 0)
+        (1, block_q, D),
+        lambda bh, s, g, o_, i_, f_, *_, grp=group: (bh * grp + g, i_[s], 0),
     )
     lspec = pl.BlockSpec(
-        (1, block_q, LANES), lambda bh, j, g, i, grp=group: (bh * grp + g, i, 0)
+        (1, block_q),
+        lambda bh, s, g, o_, i_, f_, *_, grp=group: (bh * grp + g, i_[s]),
     )
-    kvspec = pl.BlockSpec((1, block_kv, D), lambda bh, j, g, i: (bh, j, 0))
+    kvspec = pl.BlockSpec(
+        (1, block_kv, D), lambda bh, s, g, o_, i_, f_, *_: (bh, o_[s], 0)
+    )
     in_specs = [qspec, kvspec, kvspec, qspec, lspec, lspec]
+    scalar_args = [
+        jnp.asarray(sched.outer), jnp.asarray(sched.inner), jnp.asarray(sched.flags)
+    ]
     inputs = [q, k, v, do, lse, delta]
     if has_segments:
+        scalar_args.append(
+            segment_step_tables(q_seg, kv_seg, sched, block_q, block_kv, kv_major=True)
+        )
         in_specs += [
-            pl.BlockSpec((1, block_q), lambda bh, j, g, i, grp=group: (bh * grp + g, i)),
-            pl.BlockSpec((1, block_kv), lambda bh, j, g, i: (bh, j)),
+            pl.BlockSpec(
+                (1, block_q), lambda bh, s, g, o_, i_, f_, t_, h=heads: (bh // h, i_[s])
+            ),
+            pl.BlockSpec(
+                (1, block_kv), lambda bh, s, g, o_, i_, f_, t_, h=heads: (bh // h, o_[s])
+            ),
         ]
         inputs += [q_seg, kv_seg]
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(scalar_args),
+        grid=(BHk, sched.n_steps, group),
         in_specs=in_specs,
         out_specs=[kvspec, kvspec],
-        out_shape=[
-            jax.ShapeDtypeStruct((BHk, Skp, D), jnp.float32),
-            jax.ShapeDtypeStruct((BHk, Skp, D), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_kv, D), jnp.float32),
-            pltpu.VMEM((block_kv, D), jnp.float32),
-        ],
+        scratch_shapes=scratch_shapes,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary", "arbitrary"),
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
         cost_estimate=cost,
         interpret=interpret,
-        name="fa2_bwd_dkv_varlen" if has_segments else "fa2_bwd_dkv",
-    )(*inputs)
+        name="fa2_bwd_dkv_compact_varlen" if has_segments else "fa2_bwd_dkv_compact",
+    )(*scalar_args, *inputs)
 
 
 # ---------------------------------------------------------------------------
@@ -172,7 +345,29 @@ def flash_bwd_dkv(
 # ---------------------------------------------------------------------------
 
 
-def _dq_kernel(
+def _dq_compute(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_scr,
+                spec, i, j, bq, bk, kv_valid, needs_mask, q_seg, kv_seg):
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    do = do_ref[0]
+    lse = lse_ref[0][:, None]
+    delta = delta_ref[0][:, None]
+    p, _ = _recompute_p(
+        q, k, lse, spec, i, j, bq, bk, kv_valid, needs_mask, q_seg, kv_seg
+    )
+    dp = jax.lax.dot_general(
+        do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    ds = p * (dp - delta)
+    # dQ_i += dS K_j                                            (line 15)
+    dq_scr[...] += jax.lax.dot_general(
+        ds.astype(k.dtype), k, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _dq_kernel_dense(
     *refs,
     spec: MaskSpec, bq: int, bk: int, t_kv: int, kv_valid: int,
     has_segments: bool = False,
@@ -192,28 +387,51 @@ def _dq_kernel(
     def _init():
         dq_scr[...] = jnp.zeros_like(dq_scr)
 
-    empty, _ = _visibility(spec, i, j, bq, bk, kv_valid, q_seg, kv_seg)
+    empty, needs_mask = _visibility(spec, i, j, bq, bk, kv_valid, q_seg, kv_seg)
 
     @pl.when(~empty)
     def _compute():
-        q = q_ref[0]
-        k = k_ref[0]
-        v = v_ref[0]
-        do = do_ref[0]
-        lse = lse_ref[0][:, :1]
-        delta = delta_ref[0][:, :1]
-        p, _ = _recompute_p(q, k, lse, spec, i, j, bq, bk, kv_valid, q_seg, kv_seg)
-        dp = jax.lax.dot_general(
-            do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        )
-        ds = p * (dp - delta)
-        # dQ_i += dS K_j                                            (line 15)
-        dq_scr[...] += jax.lax.dot_general(
-            ds.astype(k.dtype), k, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
+        _dq_compute(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_scr,
+                    spec, i, j, bq, bk, kv_valid, needs_mask, q_seg, kv_seg)
 
     @pl.when(j == t_kv - 1)
+    def _emit():
+        dq_ref[0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _dq_kernel_compact(
+    *refs,
+    spec: MaskSpec, bq: int, bk: int, kv_valid: int, heads: int,
+    has_segments: bool = False,
+):
+    if has_segments:
+        (outer_ref, inner_ref, flags_ref, seg_ref,
+         q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qs_ref, ks_ref,
+         dq_ref, dq_scr) = refs
+        q_seg, kv_seg = qs_ref[0], ks_ref[0]
+    else:
+        (outer_ref, inner_ref, flags_ref,
+         q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+         dq_ref, dq_scr) = refs
+        q_seg = kv_seg = None
+    bh = pl.program_id(0)
+    s = pl.program_id(1)
+    i = outer_ref[s]
+    j = inner_ref[s]
+    active, first, last, needs_mask = decode_step_bits(
+        flags_ref[s], seg_ref[bh // heads, s] if has_segments else None
+    )
+
+    @pl.when(first)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    @pl.when(active)
+    def _compute():
+        _dq_compute(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_scr,
+                    spec, i, j, bq, bk, kv_valid, needs_mask, q_seg, kv_seg)
+
+    @pl.when(last)
     def _emit():
         dq_ref[0] = dq_scr[...].astype(dq_ref.dtype)
 
@@ -221,18 +439,19 @@ def _dq_kernel(
 def flash_bwd_dq(
     q, k, v, do, lse, delta, spec: MaskSpec, *,
     group: int, block_q: int, block_kv: int, kv_valid: int,
-    q_seg=None, kv_seg=None, interpret: bool = True,
+    q_seg=None, kv_seg=None, interpret: Optional[bool] = None,
+    schedule: str = "compact",
 ):
-    """Returns dq in (BH, Sq, D) fp32 (gradient w.r.t. *scaled* q)."""
+    """Returns dq in (BH, Sq, D) fp32 (gradient w.r.t. *scaled* q).
+
+    lse/delta are lane-major (BH, Sqp) f32; segment ids (if any) are
+    unreplicated (B, Sqp)/(B, Skp).
+    """
+    interpret = resolve_interpret(interpret)
     BH, Sq, D = q.shape
     BHk, Skp, _ = k.shape
     t_q, t_kv = Sq // block_q, Skp // block_kv
-    grid = (BH, t_q, t_kv)
     has_segments = q_seg is not None
-    kernel = functools.partial(
-        _dq_kernel, spec=spec, bq=block_q, bk=block_kv, t_kv=t_kv,
-        kv_valid=kv_valid, has_segments=has_segments,
-    )
     from repro.core.flash import _visible_pairs
 
     n_vis = len(_visible_pairs(spec, t_q, t_kv, block_q, block_kv)[0])
@@ -242,28 +461,89 @@ def flash_bwd_dq(
         + BH * n_vis * 2 * block_kv * D * k.dtype.itemsize,
         transcendentals=BH * n_vis * block_q * block_kv,
     )
-    qspec = pl.BlockSpec((1, block_q, D), lambda bh, i, j: (bh, i, 0))
-    lspec = pl.BlockSpec((1, block_q, LANES), lambda bh, i, j: (bh, i, 0))
-    kvspec = pl.BlockSpec((1, block_kv, D), lambda bh, i, j, g=group: (bh // g, j, 0))
+    out_shape = jax.ShapeDtypeStruct((BH, Sq, D), jnp.float32)
+    scratch_shapes = [pltpu.VMEM((block_q, D), jnp.float32)]
+
+    if schedule == "dense":
+        kernel = functools.partial(
+            _dq_kernel_dense, spec=spec, bq=block_q, bk=block_kv, t_kv=t_kv,
+            kv_valid=kv_valid, has_segments=has_segments,
+        )
+        qspec = pl.BlockSpec((1, block_q, D), lambda bh, i, j: (bh, i, 0))
+        lspec = pl.BlockSpec((1, block_q), lambda bh, i, j: (bh, i))
+        kvspec = pl.BlockSpec((1, block_kv, D), lambda bh, i, j, g=group: (bh // g, j, 0))
+        in_specs = [qspec, kvspec, kvspec, qspec, lspec, lspec]
+        inputs = [q, k, v, do, lse, delta]
+        if has_segments:
+            heads = BH // q_seg.shape[0]
+            in_specs += [
+                pl.BlockSpec((1, block_q), lambda bh, i, j, h=heads: (bh // h, i)),
+                pl.BlockSpec((1, block_kv), lambda bh, i, j, h=heads: (bh // h, j)),
+            ]
+            inputs += [q_seg, kv_seg]
+        return pl.pallas_call(
+            kernel,
+            grid=(BH, t_q, t_kv),
+            in_specs=in_specs,
+            out_specs=qspec,
+            out_shape=out_shape,
+            scratch_shapes=scratch_shapes,
+            compiler_params=CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary"),
+            ),
+            cost_estimate=cost,
+            interpret=interpret,
+            name="fa2_bwd_dq_varlen" if has_segments else "fa2_bwd_dq",
+        )(*inputs)
+
+    if schedule != "compact":
+        raise ValueError(f"unknown tile schedule: {schedule!r}")
+    sched = build_tile_schedule(spec, t_q, t_kv, block_q, block_kv, kv_valid)
+    heads = BH // q_seg.shape[0] if has_segments else 1
+    kernel = functools.partial(
+        _dq_kernel_compact, spec=spec, bq=block_q, bk=block_kv,
+        kv_valid=kv_valid, heads=heads, has_segments=has_segments,
+    )
+    qspec = pl.BlockSpec(
+        (1, block_q, D), lambda bh, s, o_, i_, f_, *_: (bh, o_[s], 0)
+    )
+    lspec = pl.BlockSpec((1, block_q), lambda bh, s, o_, i_, f_, *_: (bh, o_[s]))
+    kvspec = pl.BlockSpec(
+        (1, block_kv, D), lambda bh, s, o_, i_, f_, *_, g=group: (bh // g, i_[s], 0)
+    )
     in_specs = [qspec, kvspec, kvspec, qspec, lspec, lspec]
+    scalar_args = [
+        jnp.asarray(sched.outer), jnp.asarray(sched.inner), jnp.asarray(sched.flags)
+    ]
     inputs = [q, k, v, do, lse, delta]
     if has_segments:
+        scalar_args.append(
+            segment_step_tables(q_seg, kv_seg, sched, block_q, block_kv)
+        )
         in_specs += [
-            pl.BlockSpec((1, block_q), lambda bh, i, j: (bh, i)),
-            pl.BlockSpec((1, block_kv), lambda bh, i, j, g=group: (bh // g, j)),
+            pl.BlockSpec(
+                (1, block_q), lambda bh, s, o_, i_, f_, t_, h=heads: (bh // h, o_[s])
+            ),
+            pl.BlockSpec(
+                (1, block_kv), lambda bh, s, o_, i_, f_, t_, h=heads: (bh // h, i_[s])
+            ),
         ]
         inputs += [q_seg, kv_seg]
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(scalar_args),
+        grid=(BH, sched.n_steps),
         in_specs=in_specs,
         out_specs=qspec,
-        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
+        scratch_shapes=scratch_shapes,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
+            dimension_semantics=("parallel", "arbitrary"),
         ),
         cost_estimate=cost,
         interpret=interpret,
-        name="fa2_bwd_dq_varlen" if has_segments else "fa2_bwd_dq",
-    )(*inputs)
+        name="fa2_bwd_dq_compact_varlen" if has_segments else "fa2_bwd_dq_compact",
+    )(*scalar_args, *inputs)

@@ -10,7 +10,9 @@ head in one step (the paper's MQA/GQA indexing note).
 
 Layouts (ops.py): q (B*Hkv, G, D) pre-scaled; kv (B*Hkv, S, D);
 lengths (B*Hkv,) int32 in SMEM. Outputs o_parts (B*Hkv, ns, G, D) fp32 and
-lse_parts (B*Hkv, ns, G, LANES) fp32.
+lse_parts (B*Hkv, ns, G) fp32 -- lane-major, the same softmax-stat layout
+contract as flash_fwd.py (DESIGN.md Section 2), merged in XLA by
+``online_softmax.combine_lse_outputs``.
 """
 
 from __future__ import annotations
@@ -24,7 +26,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.masks import DEFAULT_MASK_VALUE
-from repro.kernels.compat import CompilerParams
+from repro.kernels.compat import CompilerParams, resolve_interpret
 
 LANES = 128
 
@@ -69,7 +71,7 @@ def _decode_kernel(
     ) / l_safe
     lse = jnp.where(l == 0.0, -jnp.inf, m + jnp.log(l_safe))
     o_ref[0, 0] = jnp.where(any_valid, o, 0.0)
-    lse_ref[0, 0] = jnp.broadcast_to(lse, lse_ref.shape[2:])
+    lse_ref[0, 0] = lse[:, 0]  # (G,) lane-major
 
 
 def flash_decode_kernel(
@@ -83,8 +85,9 @@ def flash_decode_kernel(
     sink: int = 0,
     kv_seg: Optional[jnp.ndarray] = None,  # (BHk, S) int32 packed-cache ids
     q_seg: Optional[jnp.ndarray] = None,  # (BHk,) int32 query's segment
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
+    interpret = resolve_interpret(interpret)
     BHk, G, D = q.shape
     _, S, _ = k.shape
     ns = num_splits
@@ -119,11 +122,11 @@ def flash_decode_kernel(
         in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, G, D), lambda bh, c: (bh, c, 0, 0)),
-            pl.BlockSpec((1, 1, G, LANES), lambda bh, c: (bh, c, 0, 0)),
+            pl.BlockSpec((1, 1, G), lambda bh, c: (bh, c, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((BHk, ns, G, D), jnp.float32),
-            jax.ShapeDtypeStruct((BHk, ns, G, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((BHk, ns, G), jnp.float32),
         ],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel"),

@@ -2,23 +2,39 @@
 
 TPU mapping of the paper's scheme (DESIGN.md Section 2):
 
-  * Grid ``(B*Hq, Tq, Tkv)`` -- (batch x heads) plus the paper's C2
-    sequence-dimension axis ``Tq``; both are `parallel`. The KV axis ``Tkv``
-    is `arbitrary` (sequential on TPU), which makes the VMEM scratch carry
-    the online-softmax state across KV steps.
+  * Grid: (batch x heads) is `parallel`; the KV dimension is the sequential
+    (`arbitrary`) axis, which makes the VMEM scratch carry the online-
+    softmax state across KV steps.
+  * ``schedule="compact"`` (default): the sequential axis enumerates ONLY
+    the visible (i, j) tile pairs -- flattened q-row-major into a scalar-
+    prefetched schedule table (kernels/schedule.py), grid ``(BH, n_steps)``.
+    Spec-masked tiles are never *visited*: the paper's Section 3.1 work
+    partitioning moved from an in-kernel branch into the grid itself, so
+    causal drops ~2x of the grid steps and K/V tile DMAs, sliding-window
+    O(S/W)x. Packed-varlen visibility is data-dependent and cannot shrink
+    the (static) grid; cross-segment tiles still occupy a step but skip
+    their *compute* via a prefetched per-(batch, step) bit table -- no
+    in-kernel segment-id min/max probing.
+  * ``schedule="dense"``: the legacy ``(BH, Tq, Tkv)`` grid that visits
+    every tile and skips empty ones with ``pl.when`` (kept as the
+    measurable baseline; the matmuls are skipped but the grid step and its
+    tile DMA still happen).
   * "Split-Q" warp partitioning (C3) becomes q-block-stationary scheduling:
-    the Q tile is fetched once per (bh, i) and stays in VMEM while K/V
+    the Q tile is fetched once per row run and stays in VMEM while K/V
     stream past; the accumulator never leaves VMEM scratch. There is no
     cross-"worker" communication, exactly as in the paper's Figure 3 right.
   * C1: the accumulator is un-rescaled until the final KV step, where we
     apply ``diag(l)^-1`` once and emit the logsumexp.
-  * Causal/window block skipping: fully-masked tiles skip the MXU work via
-    ``pl.when`` (the TPU grid still visits the step -- the cost is a scalar
-    branch, the matmuls are skipped).
+  * The logsumexp is emitted LANE-MAJOR: ``(BH, Sq)`` f32 with the sequence
+    on the 128-lane axis, BlockSpec ``(1, block_q)`` -- 128x fewer softmax-
+    stat bytes than the historical ``(BH, Sq, LANES)`` broadcast. The
+    backward consumes the same layout; decode's split merge reuses it.
 
 Layout contract (set up by ops.py): q (BH, Sq, D), k/v (BHk, Skv, D) with
 BH = B * Hq, BHk = B * Hkv, q head ``h`` reading kv head ``h // G``.
 All sequence lengths pre-padded to the block size; KV padding masked here.
+Segment ids (packed varlen) arrive UNREPLICATED as (B, Sqp)/(B, Skp); the
+index maps divide the head-row id by the head count.
 """
 
 from __future__ import annotations
@@ -32,7 +48,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.masks import DEFAULT_MASK_VALUE, MaskSpec
-from repro.kernels.compat import CompilerParams
+from repro.kernels.compat import CompilerParams, resolve_interpret
+from repro.kernels.schedule import (
+    build_tile_schedule,
+    decode_step_bits,
+    segment_step_tables,
+)
 
 LANES = 128
 
@@ -42,6 +63,9 @@ def _visibility(
     q_seg=None, kv_seg=None,
 ):
     """In-kernel scalar visibility: returns (is_empty, needs_mask) bools.
+
+    Used by the DENSE schedule only -- the compact schedule precomputes the
+    same classification host-side (kernels/schedule.py) and prefetches it.
 
     i/j are (traced) program ids; spec fields and block sizes are static, so
     every branch below is a static Python branch over *which* scalar ops to
@@ -121,7 +145,55 @@ def _tile_mask(
     return mask
 
 
-def _fwd_kernel(
+# ---------------------------------------------------------------------------
+# Shared tile-step bodies (used by both schedules)
+# ---------------------------------------------------------------------------
+
+
+def _init_state(m_scr, l_scr, acc_scr):
+    m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+    l_scr[...] = jnp.zeros_like(l_scr)
+    acc_scr[...] = jnp.zeros_like(acc_scr)
+
+
+def _online_softmax_step(q, k, v, mask, needs_mask, m_scr, l_scr, acc_scr):
+    """One KV-tile update (FA2 Algorithm 1 lines 8-10, C1a un-rescaled)."""
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bq, bk)
+    s = jnp.where(jnp.logical_or(~needs_mask, mask), s, DEFAULT_MASK_VALUE)
+
+    m_prev = m_scr[:, :1]  # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.where(jnp.isneginf(m_prev), 0.0, jnp.exp(m_prev - m_new))
+    p = jnp.exp(s - m_new)
+    l_new = l_scr[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    # C1a: accumulate UN-rescaled; only the running-max correction.
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+
+def _finalize_state(o_ref, lse_ref, m_scr, l_scr, acc_scr):
+    """C1a final rescale + the lane-major logsumexp emit."""
+    l = l_scr[:, :1]
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0] = (acc_scr[...] / l_safe).astype(o_ref.dtype)
+    m = m_scr[:, :1]
+    lse = jnp.where(l == 0.0, -jnp.inf, m + jnp.log(l_safe))
+    lse_ref[0] = lse[:, 0]  # (bq,) on the lane axis
+
+
+# ---------------------------------------------------------------------------
+# Dense schedule (legacy baseline): visit every tile, branch-skip empties
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel_dense(
     *refs,  # inputs [+ optional segment-id refs], outputs, VMEM scratch
     spec: MaskSpec,
     bq: int,
@@ -142,45 +214,78 @@ def _fwd_kernel(
 
     @pl.when(j == 0)
     def _init():
-        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
+        _init_state(m_scr, l_scr, acc_scr)
 
     empty, needs_mask = _visibility(spec, i, j, bq, bk, kv_valid, q_seg, kv_seg)
 
     @pl.when(~empty)
     def _compute():
-        q = q_ref[0]  # (bq, d) -- pre-scaled by 1/sqrt(d) in ops.py
-        k = k_ref[0]  # (bk, d)
-        v = v_ref[0]
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        )  # (bq, bk)
         mask = _tile_mask(spec, i, j, bq, bk, kv_valid, q_seg, kv_seg)
-        s = jnp.where(jnp.logical_or(~needs_mask, mask), s, DEFAULT_MASK_VALUE)
-
-        m_prev = m_scr[:, :1]  # (bq, 1)
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        alpha = jnp.where(jnp.isneginf(m_prev), 0.0, jnp.exp(m_prev - m_new))
-        p = jnp.exp(s - m_new)
-        l_new = l_scr[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
-        # C1a: accumulate UN-rescaled; only the running-max correction.
-        pv = jax.lax.dot_general(
-            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
+        _online_softmax_step(
+            q_ref[0], k_ref[0], v_ref[0], mask, needs_mask, m_scr, l_scr, acc_scr
         )
-        acc_scr[...] = acc_scr[...] * alpha + pv
-        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
-        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
 
     @pl.when(j == t_kv - 1)
     def _finalize():
-        l = l_scr[:, :1]
-        l_safe = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0] = (acc_scr[...] / l_safe).astype(o_ref.dtype)
-        m = m_scr[:, :1]
-        lse = jnp.where(l == 0.0, -jnp.inf, m + jnp.log(l_safe))
-        lse_ref[0] = jnp.broadcast_to(lse, lse_ref.shape[1:])
+        _finalize_state(o_ref, lse_ref, m_scr, l_scr, acc_scr)
+
+
+# ---------------------------------------------------------------------------
+# Compact schedule: the grid IS the visible-tile list
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel_compact(
+    *refs,  # scalar-prefetch refs, inputs [+ seg tiles], outputs, scratch
+    spec: MaskSpec,
+    bq: int,
+    bk: int,
+    kv_valid: int,
+    heads: int,
+    has_segments: bool = False,
+):
+    if has_segments:
+        (outer_ref, inner_ref, flags_ref, seg_ref,
+         q_ref, k_ref, v_ref, qs_ref, ks_ref,
+         o_ref, lse_ref, m_scr, l_scr, acc_scr) = refs
+        q_seg, kv_seg = qs_ref[0], ks_ref[0]
+    else:
+        (outer_ref, inner_ref, flags_ref,
+         q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr) = refs
+        q_seg = kv_seg = None
+    bh = pl.program_id(0)
+    s = pl.program_id(1)
+    i = outer_ref[s]
+    j = inner_ref[s]
+    active, first, last, needs_mask = decode_step_bits(
+        flags_ref[s], seg_ref[bh // heads, s] if has_segments else None
+    )
+
+    @pl.when(first)
+    def _init():
+        _init_state(m_scr, l_scr, acc_scr)
+
+    @pl.when(active)
+    def _compute():
+        mask = _tile_mask(spec, i, j, bq, bk, kv_valid, q_seg, kv_seg)
+        _online_softmax_step(
+            q_ref[0], k_ref[0], v_ref[0], mask, needs_mask, m_scr, l_scr, acc_scr
+        )
+
+    @pl.when(last)
+    def _finalize():
+        _finalize_state(o_ref, lse_ref, m_scr, l_scr, acc_scr)
+
+
+def _fwd_cost(BH, n_vis, block_q, block_kv, D, q, k):
+    """Roofline-honest cost: count only visible tiles (block skipping)."""
+    flops_per_tile = 2 * block_q * block_kv * D * 2  # QK^T + PV
+    kv_tile_bytes = 2 * block_kv * D * k.dtype.itemsize  # K + V tiles streamed
+    return pl.CostEstimate(
+        flops=BH * n_vis * flops_per_tile,
+        bytes_accessed=2 * q.size * q.dtype.itemsize + BH * n_vis * kv_tile_bytes,
+        transcendentals=BH * n_vis * block_q * block_kv,
+    )
 
 
 def flash_fwd(
@@ -193,69 +298,119 @@ def flash_fwd(
     block_q: int,
     block_kv: int,
     kv_valid: int,  # unpadded KV length
-    q_seg: Optional[jnp.ndarray] = None,  # (BH, Sq) int32 segment ids
-    kv_seg: Optional[jnp.ndarray] = None,  # (BHk, Skp) int32
-    interpret: bool = True,
+    q_seg: Optional[jnp.ndarray] = None,  # (B, Sqp) int32 segment ids
+    kv_seg: Optional[jnp.ndarray] = None,  # (B, Skp) int32
+    interpret: Optional[bool] = None,
+    schedule: str = "compact",
 ):
+    interpret = resolve_interpret(interpret)
     BH, Sq, D = q.shape
     BHk, Skp, _ = k.shape
     assert Sq % block_q == 0 and Skp % block_kv == 0
     t_q, t_kv = Sq // block_q, Skp // block_kv
-    grid = (BH, t_q, t_kv)
     has_segments = q_seg is not None
 
-    kernel = functools.partial(
-        _fwd_kernel, spec=spec, bq=block_q, bk=block_kv, t_kv=t_kv,
-        kv_valid=kv_valid, has_segments=has_segments,
-    )
-    # Roofline-honest cost: count only visible tiles (block skipping).
     # (Segment skipping is data-dependent, so the static spec-only count is
     # an upper bound there.)
     from repro.core.flash import _visible_pairs
 
     n_vis = len(_visible_pairs(spec, t_q, t_kv, block_q, block_kv)[0])
-    flops_per_tile = 2 * block_q * block_kv * D * 2  # QK^T + PV
-    kv_tile_bytes = 2 * block_kv * D * k.dtype.itemsize  # K + V tiles streamed
-    cost = pl.CostEstimate(
-        flops=BH * n_vis * flops_per_tile,
-        bytes_accessed=2 * q.size * q.dtype.itemsize + BH * n_vis * kv_tile_bytes,
-        transcendentals=BH * n_vis * block_q * block_kv,
-    )
+    cost = _fwd_cost(BH, n_vis, block_q, block_kv, D, q, k)
+    out_shape = [
+        jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        jax.ShapeDtypeStruct((BH, Sq), jnp.float32),  # lane-major lse
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((block_q, LANES), jnp.float32),
+        pltpu.VMEM((block_q, LANES), jnp.float32),
+        pltpu.VMEM((block_q, D), jnp.float32),
+    ]
 
+    if schedule == "dense":
+        kernel = functools.partial(
+            _fwd_kernel_dense, spec=spec, bq=block_q, bk=block_kv, t_kv=t_kv,
+            kv_valid=kv_valid, has_segments=has_segments,
+        )
+        in_specs = [
+            pl.BlockSpec((1, block_q, D), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda bh, i, j, g=group: (bh // g, j, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda bh, i, j, g=group: (bh // g, j, 0)),
+        ]
+        inputs = [q, k, v]
+        if has_segments:
+            heads = BH // q_seg.shape[0]
+            in_specs += [
+                pl.BlockSpec((1, block_q), lambda bh, i, j, h=heads: (bh // h, i)),
+                pl.BlockSpec((1, block_kv), lambda bh, i, j, h=heads: (bh // h, j)),
+            ]
+            inputs += [q_seg, kv_seg]
+        return pl.pallas_call(
+            kernel,
+            grid=(BH, t_q, t_kv),
+            in_specs=in_specs,
+            out_specs=[
+                pl.BlockSpec((1, block_q, D), lambda bh, i, j: (bh, i, 0)),
+                pl.BlockSpec((1, block_q), lambda bh, i, j: (bh, i)),
+            ],
+            out_shape=out_shape,
+            scratch_shapes=scratch_shapes,
+            compiler_params=CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary"),
+            ),
+            cost_estimate=cost,
+            interpret=interpret,
+            name="fa2_fwd_varlen" if has_segments else "fa2_fwd",
+        )(*inputs)
+
+    if schedule != "compact":
+        raise ValueError(f"unknown tile schedule: {schedule!r}")
+    sched = build_tile_schedule(spec, t_q, t_kv, block_q, block_kv, kv_valid)
+    heads = BH // q_seg.shape[0] if has_segments else 1
+    kernel = functools.partial(
+        _fwd_kernel_compact, spec=spec, bq=block_q, bk=block_kv,
+        kv_valid=kv_valid, heads=heads, has_segments=has_segments,
+    )
+    # index maps receive the scalar-prefetch refs after the grid ids
     in_specs = [
-        pl.BlockSpec((1, block_q, D), lambda bh, i, j: (bh, i, 0)),
-        pl.BlockSpec((1, block_kv, D), lambda bh, i, j, g=group: (bh // g, j, 0)),
-        pl.BlockSpec((1, block_kv, D), lambda bh, i, j, g=group: (bh // g, j, 0)),
+        pl.BlockSpec((1, block_q, D), lambda bh, s, o_, i_, f_, *_: (bh, o_[s], 0)),
+        pl.BlockSpec(
+            (1, block_kv, D), lambda bh, s, o_, i_, f_, *_, g=group: (bh // g, i_[s], 0)
+        ),
+        pl.BlockSpec(
+            (1, block_kv, D), lambda bh, s, o_, i_, f_, *_, g=group: (bh // g, i_[s], 0)
+        ),
+    ]
+    scalar_args = [
+        jnp.asarray(sched.outer), jnp.asarray(sched.inner), jnp.asarray(sched.flags)
     ]
     inputs = [q, k, v]
     if has_segments:
+        scalar_args.append(
+            segment_step_tables(q_seg, kv_seg, sched, block_q, block_kv)
+        )
         in_specs += [
-            pl.BlockSpec((1, block_q), lambda bh, i, j: (bh, i)),
-            pl.BlockSpec((1, block_kv), lambda bh, i, j, g=group: (bh // g, j)),
+            pl.BlockSpec((1, block_q), lambda bh, s, o_, i_, f_, t_, h=heads: (bh // h, o_[s])),
+            pl.BlockSpec((1, block_kv), lambda bh, s, o_, i_, f_, t_, h=heads: (bh // h, i_[s])),
         ]
         inputs += [q_seg, kv_seg]
-
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(scalar_args),
+        grid=(BH, sched.n_steps),
         in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((1, block_q, D), lambda bh, i, j: (bh, i, 0)),
-            pl.BlockSpec((1, block_q, LANES), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_q, D), lambda bh, s, o_, i_, f_, *_: (bh, o_[s], 0)),
+            pl.BlockSpec((1, block_q), lambda bh, s, o_, i_, f_, *_: (bh, o_[s])),
         ],
-        out_shape=[
-            jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
-            jax.ShapeDtypeStruct((BH, Sq, LANES), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_q, LANES), jnp.float32),
-            pltpu.VMEM((block_q, LANES), jnp.float32),
-            pltpu.VMEM((block_q, D), jnp.float32),
-        ],
+        scratch_shapes=scratch_shapes,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
+            dimension_semantics=("parallel", "arbitrary"),
         ),
         cost_estimate=cost,
         interpret=interpret,
-        name="fa2_fwd_varlen" if has_segments else "fa2_fwd",
-    )(*inputs)
+        name="fa2_fwd_compact_varlen" if has_segments else "fa2_fwd_compact",
+    )(*scalar_args, *inputs)

@@ -4,6 +4,24 @@ Handles: layout normalization ((B,S,H,D) -> per-head rows), padding to block
 multiples, q pre-scaling, the fwd<->bwd pairing via ``jax.custom_vjp``
 (Algorithm 1 + Algorithm 2), and the decode split merge. The pure-jnp oracle
 lives in ref.py; parity is enforced by tests/test_flash_kernels.py.
+
+Memory contract (DESIGN.md Section 2):
+
+  * The ``custom_vjp`` boundary sits INSIDE the layout prep: the core
+    differentiable function takes *prepped* tensors (head-major, padded,
+    q pre-scaled) and its residuals are exactly those tensors plus the
+    kernel outputs -- the backward never re-runs ``_prep`` (no re-transpose
+    / re-pad / re-scale of q, k, v). The cheap layout ops around the core
+    are differentiated by XLA itself.
+  * The logsumexp is lane-major ``(BH, Sqp)`` f32 end to end (kernels emit
+    it, the backward consumes it, decode's split merge reuses it) -- 128x
+    fewer softmax-stat bytes than the old ``(BH, Sqp, LANES)`` broadcast,
+    for both lse and delta.
+  * ``delta = rowsum(dO o O)`` is a one-pass Pallas kernel
+    (``flash_bwd.flash_bwd_delta``), not an XLA elementwise pass.
+  * Tile scheduling is ``schedule="compact"`` by default (see
+    kernels/schedule.py); ``"dense"`` keeps the legacy visit-every-tile
+    grid for comparison.
 """
 
 from __future__ import annotations
@@ -16,13 +34,25 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.masks import MaskSpec
+from repro.core.masks import MaskSpec, pad_segments
 from repro.core.online_softmax import combine_lse_outputs
 from repro.kernels import flash_bwd as _bwd
 from repro.kernels import flash_decode as _dec
 from repro.kernels import flash_fwd as _fwd
+from repro.kernels.schedule import TileSchedule, build_tile_schedule  # re-export
 
 LANES = _fwd.LANES
+
+__all__ = [
+    "PallasFlashConfig",
+    "TileSchedule",
+    "build_tile_schedule",
+    "flash_attention_pallas",
+    "flash_attention_pallas_varlen",
+    "flash_attention_pallas_varlen_with_lse",
+    "flash_attention_pallas_with_lse",
+    "flash_decode_pallas",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,7 +61,25 @@ class PallasFlashConfig:
     block_q: int = 512
     block_kv: int = 512
     scale: Optional[float] = None
-    interpret: bool = True
+    interpret: Optional[bool] = None  # None -> auto (off on TPU); compat.py
+    schedule: str = "compact"  # 'compact' | 'dense' tile schedule
+
+    def __post_init__(self):
+        if self.schedule not in ("compact", "dense"):
+            raise ValueError(f"unknown tile schedule: {self.schedule!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class _KernelMeta:
+    """Static call contract of the custom_vjp core (hashable, nondiff)."""
+
+    spec: MaskSpec
+    block_q: int
+    block_kv: int
+    group: int
+    kv_valid: int
+    schedule: str
+    interpret: Optional[bool]
 
 
 def _round_up(x: int, m: int) -> int:
@@ -74,133 +122,125 @@ def _prep(q, k, v, cfg: PallasFlashConfig):
     )
 
 
-def _prep_segments(q_seg, kv_seg, m):
-    """(B, Sq)/(B, Sk) int32 segment ids -> per-head-row padded layouts.
+def _prep_call(q, k, v, cfg: PallasFlashConfig, q_seg=None, kv_seg=None):
+    """Layout prep + the static kernel-call contract.
 
-    Ids are broadcast per head ((B,S) -> (B*H, S), batch-major like
-    ``_heads_layout``) and padded to the block multiple with the repo-wide
-    sentinels (masks.pad_segments): padded tiles become cross-segment, so
-    padded q rows attend nothing (l = 0 -> o = 0, lse = -inf; trimmed by
-    the caller)."""
-    from repro.core.masks import pad_segments
-
-    qs = jnp.repeat(q_seg.astype(jnp.int32), m["Hq"], axis=0)
-    ks = jnp.repeat(kv_seg.astype(jnp.int32), m["Hk"], axis=0)
-    return pad_segments(qs, ks, m["Sqp"], m["Skp"])
-
-
-def _fwd_call(q, k, v, cfg: PallasFlashConfig, q_seg=None, kv_seg=None):
+    Segment ids stay UNREPLICATED (B, Sqp)/(B, Skp) -- the kernels' index
+    maps divide the head-row id down, so the ids are never materialized per
+    head. Padding uses the repo-wide sentinels (masks.pad_segments): padded
+    tiles become cross-segment, so padded q rows attend nothing (l = 0 ->
+    o = 0, lse = -inf; trimmed by the caller).
+    """
     qh, kh, vh, m = _prep(q, k, v, cfg)
+    meta = _KernelMeta(
+        spec=cfg.spec, block_q=m["bq"], block_kv=m["bk"], group=m["G"],
+        kv_valid=m["Sk"], schedule=cfg.schedule, interpret=cfg.interpret,
+    )
     qs = ks = None
     if q_seg is not None:
-        qs, ks = _prep_segments(q_seg, kv_seg, m)
-    o, lse = _fwd.flash_fwd(
-        qh, kh, vh, cfg.spec, group=m["G"], block_q=m["bq"], block_kv=m["bk"],
-        kv_valid=m["Sk"], q_seg=qs, kv_seg=ks, interpret=cfg.interpret,
+        qs, ks = pad_segments(
+            q_seg.astype(jnp.int32), kv_seg.astype(jnp.int32), m["Sqp"], m["Skp"]
+        )
+    return qh, kh, vh, qs, ks, m, meta
+
+
+# ---------------------------------------------------------------------------
+# The differentiable core: prepped tensors in, prepped tensors out.
+# ---------------------------------------------------------------------------
+
+
+def _core_fwd(qh, kh, vh, qs, ks, meta: _KernelMeta):
+    """flash_fwd on prepped tensors -> (o (BH, Sqp, D), lse (BH, Sqp))."""
+    return _fwd.flash_fwd(
+        qh, kh, vh, meta.spec, group=meta.group, block_q=meta.block_q,
+        block_kv=meta.block_kv, kv_valid=meta.kv_valid, q_seg=qs, kv_seg=ks,
+        interpret=meta.interpret, schedule=meta.schedule,
     )
-    o = _unheads_layout(o[:, : m["Sq"]], m["B"], m["Hq"]).astype(q.dtype)
-    lse_rows = lse[:, : m["Sq"], 0].reshape(m["B"], m["Hq"], m["Sq"])
-    return o, lse_rows
+
+
+def _core_bwd(qh, kh, vh, o, lse, do, meta: _KernelMeta, qs=None, ks=None):
+    """Algorithm 2 on prepped residuals; returns (dqh, dkh, dvh)."""
+    delta = _bwd.flash_bwd_delta(
+        o, do, block_q=meta.block_q, interpret=meta.interpret
+    )  # (BH, Sqp) f32: Algorithm 2 line 4
+    # Fully-masked rows carry lse = -inf; zero it so exp(S - lse) stays 0
+    # (S is DEFAULT_MASK_VALUE there) instead of producing inf.
+    lse_s = jnp.where(jnp.isneginf(lse), 0.0, lse)
+    doh = do.astype(qh.dtype)
+    kw = dict(
+        group=meta.group, block_q=meta.block_q, block_kv=meta.block_kv,
+        kv_valid=meta.kv_valid, q_seg=qs, kv_seg=ks,
+        interpret=meta.interpret, schedule=meta.schedule,
+    )
+    dk, dv = _bwd.flash_bwd_dkv(qh, kh, vh, doh, lse_s, delta, meta.spec, **kw)
+    dq = _bwd.flash_bwd_dq(qh, kh, vh, doh, lse_s, delta, meta.spec, **kw)
+    # dq is w.r.t. the *scaled* q; the wrapper's prep transpose applies the
+    # scale (and the unpad/unhead) when XLA differentiates through it.
+    return dq.astype(qh.dtype), dk.astype(kh.dtype), dv.astype(vh.dtype)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
-def _pallas_flash(q, k, v, cfg: PallasFlashConfig):
-    return _fwd_call(q, k, v, cfg)[0]
+def _flash_core(qh, kh, vh, meta: _KernelMeta):
+    return _core_fwd(qh, kh, vh, None, None, meta)[0]
 
 
-def _pallas_flash_fwd(q, k, v, cfg):
-    o, lse = _fwd_call(q, k, v, cfg)
-    return o, (q, k, v, o, lse)
+def _flash_core_fwd(qh, kh, vh, meta):
+    o, lse = _core_fwd(qh, kh, vh, None, None, meta)
+    return o, (qh, kh, vh, o, lse)  # prepped residuals: no _prep in the bwd
 
 
-def _bwd_call(q, k, v, o, lse, do, cfg: PallasFlashConfig, q_seg=None, kv_seg=None):
-    qh, kh, vh, m = _prep(q, k, v, cfg)  # qh pre-scaled
-    B, Sq, Hq, Hk, G, D = m["B"], m["Sq"], m["Hq"], m["Hk"], m["G"], m["D"]
-    bq, bk = m["bq"], m["bk"]
-    Sqp = qh.shape[1]
-    qs = ks = None
-    if q_seg is not None:
-        qs, ks = _prep_segments(q_seg, kv_seg, m)
-
-    doh = _heads_layout(do.astype(jnp.float32))
-    oh = _heads_layout(o.astype(jnp.float32))
-    delta = jnp.sum(doh * oh, axis=-1)  # (BH, Sq): Algorithm 2 line 4
-    pad_q = Sqp - Sq
-    if pad_q:
-        doh = jnp.pad(doh, ((0, 0), (0, pad_q), (0, 0)))
-        delta = jnp.pad(delta, ((0, 0), (0, pad_q)))
-    lse_h = lse.reshape(B * Hq, Sq)
-    lse_h = jnp.where(jnp.isneginf(lse_h), 0.0, lse_h)
-    if pad_q:
-        lse_h = jnp.pad(lse_h, ((0, 0), (0, pad_q)))
-    lse_b = jnp.broadcast_to(lse_h[..., None], (*lse_h.shape, LANES))
-    delta_b = jnp.broadcast_to(delta[..., None], (*delta.shape, LANES))
-    doh = doh.astype(q.dtype)
-
-    dk, dv = _bwd.flash_bwd_dkv(
-        qh, kh, vh, doh, lse_b, delta_b, cfg.spec,
-        group=G, block_q=bq, block_kv=bk, kv_valid=m["Sk"],
-        q_seg=qs, kv_seg=ks, interpret=cfg.interpret,
-    )
-    dq = _bwd.flash_bwd_dq(
-        qh, kh, vh, doh, lse_b, delta_b, cfg.spec,
-        group=G, block_q=bq, block_kv=bk, kv_valid=m["Sk"],
-        q_seg=qs, kv_seg=ks, interpret=cfg.interpret,
-    )
-    dq = _unheads_layout(dq[:, :Sq], B, Hq) * m["scale"]
-    dk = _unheads_layout(dk[:, : m["Sk"]], B, Hk)
-    dv = _unheads_layout(dv[:, : m["Sk"]], B, Hk)
-    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+def _flash_core_bwd(meta, res, do):
+    qh, kh, vh, o, lse = res
+    return _core_bwd(qh, kh, vh, o, lse, do, meta)
 
 
-def _pallas_flash_bwd(cfg: PallasFlashConfig, res, do):
-    q, k, v, o, lse = res
-    return _bwd_call(q, k, v, o, lse, do, cfg)
-
-
-_pallas_flash.defvjp(_pallas_flash_fwd, _pallas_flash_bwd)
-
-
-# ---------------------------------------------------------------------------
-# Segment-packed (varlen) attention: same kernels, segment-aware tiles.
-# ---------------------------------------------------------------------------
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
-def _pallas_flash_varlen(q, k, v, q_seg, kv_seg, cfg: PallasFlashConfig):
-    return _fwd_call(q, k, v, cfg, q_seg, kv_seg)[0]
+def _flash_core_varlen(qh, kh, vh, qs, ks, meta: _KernelMeta):
+    return _core_fwd(qh, kh, vh, qs, ks, meta)[0]
 
 
-def _pallas_flash_varlen_fwd(q, k, v, q_seg, kv_seg, cfg):
-    o, lse = _fwd_call(q, k, v, cfg, q_seg, kv_seg)
-    return o, (q, k, v, q_seg, kv_seg, o, lse)
+def _flash_core_varlen_fwd(qh, kh, vh, qs, ks, meta):
+    o, lse = _core_fwd(qh, kh, vh, qs, ks, meta)
+    return o, (qh, kh, vh, qs, ks, o, lse)
 
 
-def _pallas_flash_varlen_bwd(cfg: PallasFlashConfig, res, do):
-    q, k, v, q_seg, kv_seg, o, lse = res
-    dq, dk, dv = _bwd_call(q, k, v, o, lse, do, cfg, q_seg, kv_seg)
+def _flash_core_varlen_bwd(meta, res, do):
+    qh, kh, vh, qs, ks, o, lse = res
+    dq, dk, dv = _core_bwd(qh, kh, vh, o, lse, do, meta, qs, ks)
     return dq, dk, dv, None, None  # integer segment ids carry no gradient
 
 
-_pallas_flash_varlen.defvjp(_pallas_flash_varlen_fwd, _pallas_flash_varlen_bwd)
+_flash_core_varlen.defvjp(_flash_core_varlen_fwd, _flash_core_varlen_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
 
 
 def flash_attention_pallas(
     q, k, v, spec: MaskSpec = MaskSpec(causal=True), *,
     scale: Optional[float] = None, block_q: int = 512, block_kv: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None, schedule: str = "compact",
 ):
     """Differentiable FA2 via the Pallas TPU kernels. q (B,Sq,Hq,D)."""
     cfg = PallasFlashConfig(
-        spec=spec, block_q=block_q, block_kv=block_kv, scale=scale, interpret=interpret
+        spec=spec, block_q=block_q, block_kv=block_kv, scale=scale,
+        interpret=interpret, schedule=schedule,
     )
-    return _pallas_flash(q, k, v, cfg)
+    qh, kh, vh, _, _, m, meta = _prep_call(q, k, v, cfg)
+    o = _flash_core(qh, kh, vh, meta)
+    return _unheads_layout(o[:, : m["Sq"]], m["B"], m["Hq"]).astype(q.dtype)
 
 
 def flash_attention_pallas_varlen(
     q, k, v, segment_ids, spec: MaskSpec = MaskSpec(causal=True), *,
     kv_segment_ids=None, scale: Optional[float] = None,
-    block_q: int = 512, block_kv: int = 512, interpret: bool = True,
+    block_q: int = 512, block_kv: int = 512,
+    interpret: Optional[bool] = None, schedule: str = "compact",
 ):
     """Differentiable segment-packed (varlen) FA2 via the Pallas kernels.
 
@@ -209,9 +249,11 @@ def flash_attention_pallas_varlen(
     data-pipeline convention -- any non-negative ids work). Query i attends
     key j iff their ids match AND the MaskSpec admits the *global* positions
     (with contiguous packing, global causality == within-segment causality).
-    Cross-segment tiles are skipped in all three kernels (fwd, dkv, dq) via
-    per-tile id-range disjointness -- the paper's Section 3.1 block skipping
-    generalized from a static causal schedule to data-dependent segments.
+    Cross-segment tiles are skipped in all three kernels (fwd, dkv, dq):
+    under the compact schedule via a prefetched per-(batch, step) range-
+    disjointness table, under the dense schedule via in-kernel per-tile
+    id-range probing -- the paper's Section 3.1 block skipping generalized
+    from a static causal schedule to data-dependent segments.
 
     kv_segment_ids defaults to segment_ids (self-attention over one packed
     layout); a ``masks.SegmentInfo`` is accepted in place of the raw array.
@@ -226,25 +268,36 @@ def flash_attention_pallas_varlen(
     assert segment_ids.shape == q.shape[:2], (segment_ids.shape, q.shape)
     assert kv_segment_ids.shape == k.shape[:2], (kv_segment_ids.shape, k.shape)
     cfg = PallasFlashConfig(
-        spec=spec, block_q=block_q, block_kv=block_kv, scale=scale, interpret=interpret
+        spec=spec, block_q=block_q, block_kv=block_kv, scale=scale,
+        interpret=interpret, schedule=schedule,
     )
-    return _pallas_flash_varlen(
-        q, k, v, segment_ids.astype(jnp.int32), kv_segment_ids.astype(jnp.int32), cfg
-    )
+    qh, kh, vh, qs, ks, m, meta = _prep_call(q, k, v, cfg, segment_ids, kv_segment_ids)
+    o = _flash_core_varlen(qh, kh, vh, qs, ks, meta)
+    return _unheads_layout(o[:, : m["Sq"]], m["B"], m["Hq"]).astype(q.dtype)
+
+
+def _fwd_with_lse(q, k, v, cfg, q_seg=None, kv_seg=None):
+    qh, kh, vh, qs, ks, m, meta = _prep_call(q, k, v, cfg, q_seg, kv_seg)
+    o, lse = _core_fwd(qh, kh, vh, qs, ks, meta)
+    o = _unheads_layout(o[:, : m["Sq"]], m["B"], m["Hq"]).astype(q.dtype)
+    lse_rows = lse[:, : m["Sq"]].reshape(m["B"], m["Hq"], m["Sq"])
+    return o, lse_rows
 
 
 def flash_attention_pallas_varlen_with_lse(
     q, k, v, segment_ids, spec: MaskSpec = MaskSpec(causal=True), *,
     kv_segment_ids=None, scale: Optional[float] = None,
-    block_q: int = 512, block_kv: int = 512, interpret: bool = True,
+    block_q: int = 512, block_kv: int = 512,
+    interpret: Optional[bool] = None, schedule: str = "compact",
 ):
     """Forward-only varlen (serving): returns (o, lse (B, Hq, Sq))."""
     if kv_segment_ids is None:
         kv_segment_ids = segment_ids
     cfg = PallasFlashConfig(
-        spec=spec, block_q=block_q, block_kv=block_kv, scale=scale, interpret=interpret
+        spec=spec, block_q=block_q, block_kv=block_kv, scale=scale,
+        interpret=interpret, schedule=schedule,
     )
-    return _fwd_call(
+    return _fwd_with_lse(
         q, k, v, cfg, segment_ids.astype(jnp.int32), kv_segment_ids.astype(jnp.int32)
     )
 
@@ -252,19 +305,20 @@ def flash_attention_pallas_varlen_with_lse(
 def flash_attention_pallas_with_lse(
     q, k, v, spec: MaskSpec = MaskSpec(causal=True), *,
     scale: Optional[float] = None, block_q: int = 512, block_kv: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None, schedule: str = "compact",
 ):
     cfg = PallasFlashConfig(
-        spec=spec, block_q=block_q, block_kv=block_kv, scale=scale, interpret=interpret
+        spec=spec, block_q=block_q, block_kv=block_kv, scale=scale,
+        interpret=interpret, schedule=schedule,
     )
-    return _fwd_call(q, k, v, cfg)
+    return _fwd_with_lse(q, k, v, cfg)
 
 
 def flash_decode_pallas(
     q, k_cache, v_cache, cache_length, *,
     window: Optional[int] = None, sink: int = 0, scale: Optional[float] = None,
     num_splits: int = 8, kv_segment_ids=None, q_segment=None,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """Split-KV decode via the Pallas kernel. q (B,1,Hq,D); returns (o, lse).
 
@@ -291,9 +345,10 @@ def flash_decode_pallas(
         qh, kh, vh, lens, num_splits=num_splits, window=window, sink=sink,
         kv_seg=kv_seg, q_seg=q_seg, interpret=interpret,
     )
-    # Merge the splits (associative combine) -- (ns, BHk, G, D) / (ns, BHk, G)
+    # Merge the splits (associative combine) -- (ns, BHk, G, D) / (ns, BHk, G).
+    # lse_parts is already lane-major (BHk, ns, G): no broadcast axis to strip.
     o, lse = combine_lse_outputs(
-        jnp.moveaxis(o_parts, 1, 0), jnp.moveaxis(lse_parts[..., 0], 1, 0)
+        jnp.moveaxis(o_parts, 1, 0), jnp.moveaxis(lse_parts, 1, 0)
     )
     return (
         o.reshape(B, 1, Hq, D).astype(q.dtype),

@@ -1,0 +1,168 @@
+"""Compact tile schedules for the Pallas kernels (DESIGN.md Section 2).
+
+FlashAttention-2's Section 3.1 argument is about *work partitioning*: a
+causal/window mask empties whole (q_block, kv_block) tiles, and a good
+schedule never visits them. The historical kernels here visited every tile
+and branch-skipped with ``pl.when`` -- the matmuls were saved but the grid
+steps (and their K/V tile DMAs) were not. This module precomputes, per
+kernel launch, the flattened list of *visible* tile pairs plus per-step
+control flags; the kernels feed it through scalar prefetch
+(``pltpu.PrefetchScalarGridSpec``) so the sequential grid axis has exactly
+``n_steps`` entries and the index maps DMA only the tiles the schedule
+names. Causal drops ~2x of the steps, sliding-window O(S/W)x.
+
+Two orientations of the same schedule:
+
+  * q-major (``kv_major=False``) -- used by ``flash_fwd`` / ``flash_bwd_dq``:
+    steps are grouped by owning q tile ``i`` (the ``outer`` array), streaming
+    its visible kv tiles ``j`` (``inner``).
+  * kv-major (``kv_major=True``) -- used by ``flash_bwd_dkv``: grouped by
+    owning kv tile ``j`` (``outer``), streaming visible q tiles ``i``.
+
+An outer tile with *zero* visible partners still gets one placeholder step
+(ACTIVE bit clear) so its init/finalize run and its output block is written
+(zeros / -inf lse); that is the ``+ t_q`` slack in the step-count bound
+``n_steps <= n_visible + n_outer``.
+
+The static schedule is spec-only. Packed-varlen (segment) visibility is
+data-dependent, so it rides along as a second, *dynamic* table built by
+:func:`segment_step_tables` -- per (batch, step) bits computed with O(B * S)
+jnp work outside the kernel and scalar-prefetched, replacing the in-kernel
+per-tile segment-id min/max probing.
+
+The step count is cross-checked against ``core.flash._visible_pairs`` -- the
+shared schedule oracle -- at build time.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.masks import MaskSpec, tile_visibility
+
+# Static per-step flag bits (TileSchedule.flags).
+STEP_ACTIVE = 1  # tile contributes compute (clear on placeholder steps)
+STEP_FIRST = 2   # first step of its outer-tile run -> init VMEM scratch
+STEP_LAST = 4    # last step of its outer-tile run -> finalize / emit
+STEP_MASKED = 8  # partial tile (or KV padding): apply the element mask
+
+# Dynamic per-(batch, step) segment bits (segment_step_tables).
+SEG_ACTIVE = 1   # tile id ranges overlap (range-disjointness skip)
+SEG_UNIFORM = 2  # both sides uniform and equal -> tile is mask-free
+
+
+class TileSchedule(NamedTuple):
+    """Flattened compact schedule (host-side numpy; static per launch)."""
+
+    outer: np.ndarray  # (n_steps,) int32 -- owning tile index per step
+    inner: np.ndarray  # (n_steps,) int32 -- streamed tile index per step
+    flags: np.ndarray  # (n_steps,) int32 -- STEP_* bitmask
+    n_active: int      # number of ACTIVE steps == visible tile count
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.outer)
+
+
+@functools.lru_cache(maxsize=256)  # bounded: chunked prefill varies q_offset
+def build_tile_schedule(
+    spec: MaskSpec, t_q: int, t_kv: int, bq: int, bk: int, kv_valid: int,
+    kv_major: bool = False,
+) -> TileSchedule:
+    """Build the compact schedule for a (t_q x t_kv) tile grid under spec.
+
+    ``kv_valid`` is the unpadded KV length: tiles touching KV padding are
+    flagged STEP_MASKED (never dropped -- the last tile always holds some
+    real keys because padding is < one block).
+    """
+    n_outer = t_kv if kv_major else t_q
+    n_inner = t_q if kv_major else t_kv
+    outer, inner, flags = [], [], []
+    n_active = 0
+    for a in range(n_outer):
+        run = []
+        for b in range(n_inner):
+            i, j = (b, a) if kv_major else (a, b)
+            q_lo = i * bq + spec.q_offset
+            vis = tile_visibility(spec, q_lo, q_lo + bq, j * bk, j * bk + bk)
+            if vis == "empty":
+                continue
+            run.append((b, vis == "partial" or (j + 1) * bk > kv_valid))
+        if not run:
+            # placeholder so the outer tile still inits + emits (zeros).
+            outer.append(a)
+            inner.append(0)
+            flags.append(STEP_FIRST | STEP_LAST)
+            continue
+        for pos, (b, masked) in enumerate(run):
+            f = STEP_ACTIVE
+            f |= STEP_FIRST if pos == 0 else 0
+            f |= STEP_LAST if pos == len(run) - 1 else 0
+            f |= STEP_MASKED if masked else 0
+            outer.append(a)
+            inner.append(b)
+            flags.append(f)
+        n_active += len(run)
+    sched = TileSchedule(
+        outer=np.asarray(outer, np.int32),
+        inner=np.asarray(inner, np.int32),
+        flags=np.asarray(flags, np.int32),
+        n_active=n_active,
+    )
+    # Accounting invariant: the schedule's active steps are exactly the
+    # oracle's visible tiles (core.flash._visible_pairs, row-major).
+    from repro.core.flash import _visible_pairs
+
+    assert sched.n_active == len(_visible_pairs(spec, t_q, t_kv, bq, bk)[0]), (
+        "compact schedule disagrees with the _visible_pairs oracle"
+    )
+    return sched
+
+
+def decode_step_bits(flags, seg_bits=None):
+    """Shared in-kernel step decode: (active, first, last, needs_mask).
+
+    ``flags`` is the loaded STEP_* bitmask for the current step;
+    ``seg_bits`` the loaded (batch, step) segment bits or None. Used by all
+    three compact kernels so a schedule-format change lands in one place.
+    """
+    active = (flags & STEP_ACTIVE) != 0
+    needs_mask = (flags & STEP_MASKED) != 0
+    if seg_bits is not None:
+        active = jnp.logical_and(active, (seg_bits & SEG_ACTIVE) != 0)
+        needs_mask = jnp.logical_or(needs_mask, (seg_bits & SEG_UNIFORM) == 0)
+    return active, (flags & STEP_FIRST) != 0, (flags & STEP_LAST) != 0, needs_mask
+
+
+def segment_step_tables(
+    q_seg: jnp.ndarray,  # (B, Sqp) int32, padded with the masks.py sentinels
+    kv_seg: jnp.ndarray,  # (B, Skp) int32
+    sched: TileSchedule,
+    bq: int,
+    bk: int,
+    kv_major: bool = False,
+) -> jnp.ndarray:
+    """Dynamic per-(batch, step) visibility bits for a packed batch.
+
+    Returns (B, n_steps) int32 with SEG_ACTIVE / SEG_UNIFORM bits. ACTIVE
+    uses per-tile id-range disjointness (sound for any id layout, exact for
+    contiguous packing); UNIFORM means both tiles are constant and equal, so
+    the element mask can be skipped. Computed as O(B * S) jnp reductions at
+    trace time and scalar-prefetched -- no in-kernel min/max probing.
+    """
+    B = q_seg.shape[0]
+    qt = q_seg.reshape(B, -1, bq)
+    kt = kv_seg.reshape(B, -1, bk)
+    q_lo, q_hi = qt.min(axis=-1), qt.max(axis=-1)  # (B, t_q)
+    k_lo, k_hi = kt.min(axis=-1), kt.max(axis=-1)  # (B, t_kv)
+    ii = jnp.asarray(sched.inner if kv_major else sched.outer)
+    jj = jnp.asarray(sched.outer if kv_major else sched.inner)
+    qlo, qhi = q_lo[:, ii], q_hi[:, ii]  # (B, n_steps)
+    klo, khi = k_lo[:, jj], k_hi[:, jj]
+    overlap = ~((qhi < klo) | (qlo > khi))
+    uniform = (qlo == qhi) & (klo == khi) & (qlo == klo)
+    return overlap.astype(jnp.int32) | (uniform.astype(jnp.int32) << 1)

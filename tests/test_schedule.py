@@ -1,0 +1,268 @@
+"""Compact-grid tile scheduling (kernels/schedule.py): parity, accounting,
+and the lane-major lse layout contract.
+
+Three claims (ISSUE 2 / DESIGN.md Section 2):
+  (a) the compact schedule is *semantics-free*: outputs and grads match the
+      dense schedule and the ref.py oracle across specs x GQA x dtypes,
+      including packed varlen;
+  (b) the built schedule is exactly the ``_visible_pairs`` accounting -- in
+      particular the causal step count is triangular, not t_q * t_kv;
+  (c) the lane-major lse is a faithful logsumexp: split-KV pieces recombine
+      through ``combine_lse_outputs`` to the unsplit result.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.flash import _visible_pairs
+from repro.core.masks import MaskSpec
+from repro.core.online_softmax import combine_lse_outputs
+from repro.kernels.ops import (
+    flash_attention_pallas,
+    flash_attention_pallas_varlen,
+    flash_attention_pallas_with_lse,
+    flash_attention_pallas_varlen_with_lse,
+)
+from repro.kernels.ref import attention_reference
+from repro.kernels.schedule import (
+    STEP_ACTIVE,
+    STEP_FIRST,
+    STEP_LAST,
+    build_tile_schedule,
+    segment_step_tables,
+)
+
+KEY = jax.random.PRNGKey(7)
+
+SPECS = {
+    "causal": MaskSpec(causal=True),
+    "window": MaskSpec(causal=True, window=64),
+    "sink": MaskSpec(causal=True, window=64, sink=16),
+    "full": MaskSpec(),
+}
+
+
+def _mk(B, Sq, Sk, Hq, Hk, D, dtype=jnp.float32):
+    ks = jax.random.split(KEY, 4)
+    return (
+        jax.random.normal(ks[0], (B, Sq, Hq, D), dtype),
+        jax.random.normal(ks[1], (B, Sk, Hk, D), dtype),
+        jax.random.normal(ks[2], (B, Sk, Hk, D), dtype),
+        jax.random.normal(ks[3], (B, Sq, Hq, D), dtype),
+    )
+
+
+def _mk_segments(B, S, seed=0):
+    rng = np.random.default_rng(seed)
+    seg = np.zeros((B, S), np.int32)
+    for b in range(B):
+        cuts = np.sort(rng.choice(np.arange(8, S - 8), 2, replace=False))
+        seg[b, : cuts[0]] = 1
+        seg[b, cuts[0] : cuts[1]] = 2
+        seg[b, cuts[1] :] = 3 if b % 2 == 0 else 0
+    return jnp.asarray(seg)
+
+
+# ---------------------------------------------------------------------------
+# (a) compact == dense == oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec_name", ["causal", "window", "sink", "full"])
+def test_compact_matches_dense_and_ref(spec_name):
+    spec = SPECS[spec_name]
+    B, Sq, Sk, Hq, Hk, D = 2, 192, 192, 4, 2, 32  # GQA group 2
+    q, k, v, do = _mk(B, Sq, Sk, Hq, Hk, D)
+    o_ref, _ = attention_reference(q, k, v, spec)
+
+    def grads(schedule):
+        f = lambda q, k, v: (
+            flash_attention_pallas(
+                q, k, v, spec, block_q=64, block_kv=64, schedule=schedule
+            ) * do
+        ).sum()
+        return jax.grad(f, (0, 1, 2))(q, k, v)
+
+    o_c = flash_attention_pallas(q, k, v, spec, block_q=64, block_kv=64)
+    o_d = flash_attention_pallas(q, k, v, spec, block_q=64, block_kv=64, schedule="dense")
+    np.testing.assert_allclose(o_c, o_ref, atol=2e-3, rtol=1e-4)
+    # compact vs dense run the same tile updates in the same order:
+    np.testing.assert_allclose(o_c, o_d, atol=1e-6, rtol=1e-6)
+
+    g_ref = jax.grad(
+        lambda q, k, v: (attention_reference(q, k, v, spec)[0] * do).sum(), (0, 1, 2)
+    )(q, k, v)
+    for a, d, r in zip(grads("compact"), grads("dense"), g_ref):
+        np.testing.assert_allclose(a, d, atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(a, r, atol=2e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("spec_name", ["causal", pytest.param("full", marks=pytest.mark.slow)])
+def test_compact_varlen_matches_dense_and_ref(spec_name):
+    spec = SPECS[spec_name]
+    B, S, Hq, Hk, D = 2, 192, 4, 2, 32
+    q, k, v, do = _mk(B, S, S, Hq, Hk, D)
+    seg = _mk_segments(B, S)
+    o_ref, lse_ref = attention_reference(q, k, v, spec, segment_ids=seg)
+
+    outs = {}
+    for schedule in ("compact", "dense"):
+        o, lse = flash_attention_pallas_varlen_with_lse(
+            q, k, v, seg, spec, block_q=64, block_kv=64, schedule=schedule
+        )
+        f = lambda q, k, v: (
+            flash_attention_pallas_varlen(
+                q, k, v, seg, spec, block_q=64, block_kv=64, schedule=schedule
+            ) * do
+        ).sum()
+        outs[schedule] = (o, lse, jax.grad(f, (0, 1, 2))(q, k, v))
+    o_c, lse_c, g_c = outs["compact"]
+    o_d, lse_d, g_d = outs["dense"]
+    np.testing.assert_allclose(o_c, o_d, atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(o_c, o_ref, atol=2e-3, rtol=1e-4)
+    m = ~np.isneginf(np.asarray(lse_ref))
+    np.testing.assert_allclose(
+        np.asarray(lse_c)[m], np.asarray(lse_ref)[m], atol=1e-4, rtol=1e-5
+    )
+    g_ref = jax.grad(
+        lambda q, k, v: (attention_reference(q, k, v, spec, segment_ids=seg)[0] * do).sum(),
+        (0, 1, 2),
+    )(q, k, v)
+    for a, d, r in zip(g_c, g_d, g_ref):
+        np.testing.assert_allclose(a, d, atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(a, r, atol=2e-3, rtol=1e-3)
+
+
+def test_compact_bf16():
+    spec = MaskSpec(causal=True)
+    q, k, v, _ = _mk(2, 128, 128, 4, 2, 64, jnp.bfloat16)
+    o_ref, _ = attention_reference(q, k, v, spec)
+    o = flash_attention_pallas(q, k, v, spec, block_q=64, block_kv=64)
+    assert o.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_ref, np.float32), atol=2e-2, rtol=2e-2
+    )
+
+
+def test_compact_nondivisible_padding():
+    """Sq=Sk=200 with 64-blocks: KV padding tiles must stay masked."""
+    spec = MaskSpec(causal=True)
+    q, k, v, _ = _mk(1, 200, 200, 2, 1, 32)
+    o_ref, _ = attention_reference(q, k, v, spec)
+    o = flash_attention_pallas(q, k, v, spec, block_q=64, block_kv=64)
+    np.testing.assert_allclose(o, o_ref, atol=3e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# (b) schedule accounting == _visible_pairs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec_name", ["causal", "window", "sink", "full"])
+@pytest.mark.parametrize("kv_major", [False, True])
+def test_schedule_matches_visible_pairs(spec_name, kv_major):
+    spec = SPECS[spec_name]
+    t_q = t_kv = 16
+    bq = bk = 128
+    sched = build_tile_schedule(spec, t_q, t_kv, bq, bk, t_kv * bk, kv_major=kv_major)
+    ii, jj = _visible_pairs(spec, t_q, t_kv, bq, bk)
+    assert sched.n_active == len(ii)
+    # the active (i, j) set is identical to the oracle's
+    act = sched.flags & STEP_ACTIVE != 0
+    got_i = sched.inner[act] if kv_major else sched.outer[act]
+    got_j = sched.outer[act] if kv_major else sched.inner[act]
+    assert set(zip(got_i.tolist(), got_j.tolist())) == set(zip(ii.tolist(), jj.tolist()))
+    # every outer tile inits exactly once and emits exactly once
+    n_outer = t_kv if kv_major else t_q
+    assert (sched.flags & STEP_FIRST != 0).sum() == n_outer
+    assert (sched.flags & STEP_LAST != 0).sum() == n_outer
+
+
+def test_causal_step_count_bound():
+    """Acceptance: causal S=2048 fwd executes <= t*(t+1)/2 + t KV steps."""
+    t = 16  # S=2048 at block 128
+    sched = build_tile_schedule(MaskSpec(causal=True), t, t, 128, 128, t * 128)
+    assert sched.n_steps <= t * (t + 1) // 2 + t, sched.n_steps
+    assert sched.n_active == t * (t + 1) // 2  # exactly triangular
+    # dense grid would execute t*t steps; the compact grid must not.
+    assert sched.n_steps < t * t
+
+
+def test_window_step_count_drops():
+    """Sliding window drops O(S/W)x of the steps, not just the matmuls."""
+    t, b = 16, 128
+    full = build_tile_schedule(MaskSpec(causal=True), t, t, b, b, t * b)
+    win = build_tile_schedule(MaskSpec(causal=True, window=b), t, t, b, b, t * b)
+    assert win.n_steps < full.n_steps / 3
+    assert win.n_active == len(
+        _visible_pairs(MaskSpec(causal=True, window=b), t, t, b, b)[0]
+    )
+
+
+def test_segment_tables_match_kernel_accounting():
+    """The prefetched per-(batch, step) table drops exactly the tiles the
+    _visible_pairs(segments=...) oracle drops (contiguous packing)."""
+    from repro.kernels.schedule import SEG_ACTIVE
+
+    B, S, bq, bk = 1, 256, 64, 64
+    t = S // bq
+    seg = _mk_segments(B, S, seed=3)
+    spec = MaskSpec(causal=True)
+    sched = build_tile_schedule(spec, t, t, bq, bk, S)
+    table = np.asarray(segment_step_tables(seg, seg, sched, bq, bk))
+    both_active = (sched.flags & STEP_ACTIVE != 0) & (table[0] & SEG_ACTIVE != 0)
+    segs_np = np.asarray(seg[0])
+    ii, jj = _visible_pairs(spec, t, t, bq, bk, segments=segs_np)
+    assert both_active.sum() == len(ii)
+    got = set(zip(sched.outer[both_active].tolist(), sched.inner[both_active].tolist()))
+    assert got == set(zip(ii.tolist(), jj.tolist()))
+
+
+# ---------------------------------------------------------------------------
+# (c) lane-major lse round-trips through the split merge
+# ---------------------------------------------------------------------------
+
+
+def test_lse_roundtrips_through_split_merge():
+    """Attention over [KV0 | KV1] == combine of per-half (o, lse) -- the
+    contract decode's split merge relies on, fed by the kernel's lane-major
+    lse (B, Hq, Sq)."""
+    B, S, H, D = 2, 128, 2, 32
+    q, k, v, _ = _mk(B, S, S, H, H, D)
+    spec = MaskSpec()  # decode halves see disjoint KV: non-causal per piece
+    o_full, lse_full = flash_attention_pallas_with_lse(q, k, v, spec, block_q=64, block_kv=64)
+    half = S // 2
+    o0, lse0 = flash_attention_pallas_with_lse(q, k[:, :half], v[:, :half], spec, block_q=64, block_kv=64)
+    o1, lse1 = flash_attention_pallas_with_lse(q, k[:, half:], v[:, half:], spec, block_q=64, block_kv=64)
+    # combine wants (..., rows, d) with heads leading: (B, Hq, Sq, D)
+    to_rows = lambda o: jnp.moveaxis(o, 1, 2)  # (B, Hq, Sq, D)
+    o_c, lse_c = combine_lse_outputs(
+        jnp.stack([to_rows(o0), to_rows(o1)]), jnp.stack([lse0, lse1])
+    )
+    np.testing.assert_allclose(jnp.moveaxis(o_c, 2, 1), o_full, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(lse_c, lse_full, atol=1e-5, rtol=1e-5)
+
+
+def test_decode_packed_lse_merge():
+    """Packed-cache split-KV decode (lane-major lse merge) vs the oracle."""
+    from repro.kernels.ops import flash_decode_pallas
+
+    B, S, Hq, Hk, D = 2, 64, 4, 2, 32
+    q, kc, vc, _ = _mk(B, 1, S, Hq, Hk, D)
+    kv_seg = jnp.asarray(np.repeat([[1, 2]], B, 0).repeat(S // 2, 1))
+    lens = jnp.asarray([S, S], jnp.int32)
+    q_seg = jnp.asarray([2, 1], jnp.int32)
+    o, lse = flash_decode_pallas(
+        q, kc, vc, lens, num_splits=4, kv_segment_ids=kv_seg, q_segment=q_seg
+    )
+    for b in range(B):
+        sel = np.asarray(kv_seg[b]) == int(q_seg[b])
+        o_ref, lse_ref = attention_reference(
+            q[b : b + 1], kc[b : b + 1, sel], vc[b : b + 1, sel], MaskSpec()
+        )
+        np.testing.assert_allclose(o[b : b + 1], o_ref, atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(
+            lse[b : b + 1, :, 0], lse_ref[:, :, 0], atol=1e-5, rtol=1e-5
+        )
