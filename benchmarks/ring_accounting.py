@@ -1,0 +1,56 @@
+"""Ring-vs-gather context-parallel accounting (DESIGN.md Section 3 table).
+
+No timing (the ring needs a real multi-chip mesh to mean anything): these
+rows are the *static* ledger of the two context-parallel modes — bytes each
+device sends per attention call, peak resident KV bytes per device, ring
+step counts, kernel launches after empty-rectangle skipping, and the
+zigzag balance spread. They live in BENCH_attn.json so the perf trajectory
+tracks the subsystem; tests/test_ring.py asserts the invariants the numbers
+exhibit (balance <= 1 tile, ring peak KV = 2/P of gather).
+"""
+
+from __future__ import annotations
+
+from repro.core.masks import MaskSpec
+from repro.distributed import ring_schedule as rs
+
+CASES = [
+    # (name, S, P, spec, Hkv, D, dtype_bytes)
+    ("causal_s8k_p4", 8192, 4, MaskSpec(causal=True), 8, 128, 2),
+    ("causal_s64k_p16", 65536, 16, MaskSpec(causal=True), 8, 128, 2),
+    ("window_s64k_p16", 65536, 16, MaskSpec(causal=True, window=4096), 8, 128, 2),
+]
+
+
+def run(csv):
+    for name, S, P, spec, Hkv, D, db in CASES:
+        layout = rs.make_layout(S, P, spec)
+        kw = dict(kv_heads=Hkv, head_dim=D, dtype_bytes=db)
+        tiles = rs.visible_tile_counts(layout, spec, 512, 512)
+        launches = rs.kernel_launch_counts(layout, spec)
+        rows = {
+            "ring": dict(
+                comms_bytes_per_device=rs.comm_bytes_per_device(layout, **kw),
+                comms_bytes_per_device_bwd=rs.comm_bytes_per_device(
+                    layout, backward=True, **kw
+                ),
+                peak_kv_bytes_per_device=rs.peak_kv_bytes_per_device(
+                    layout, mode="ring", **kw
+                ),
+                steps=P,
+                kernel_launches_per_device_max=int(launches.max()),
+                visible_tiles_balance=f"{int(tiles.min())}..{int(tiles.max())}",
+            ),
+            "gather": dict(
+                comms_bytes_per_device=rs.gather_bytes_per_device(layout, **kw),
+                peak_kv_bytes_per_device=rs.peak_kv_bytes_per_device(
+                    layout, mode="gather", **kw
+                ),
+                steps=1,
+                kernel_launches_per_device_max=1,
+                visible_tiles_balance="n/a (one local kernel over full KV)",
+            ),
+        }
+        for mode, r in rows.items():
+            derived = " ".join(f"{k}={v}" for k, v in r.items())
+            csv.append(f"ring_accounting/{name}/{mode},,{derived}")

@@ -7,6 +7,9 @@
   nonmatmul_census    Section 3.1 C1 -- FA1-vs-FA2 non-matmul FLOP census
   table1_e2e          Table 1 -- end-to-end GPT training throughput
   roofline            deliverable (g) -- dry-run roofline table
+  ring_accounting     context-parallel ring vs all-gather: per-mode comms
+                      bytes, peak KV bytes, step/launch counts (static
+                      ledger; no timing -- also in the CI fast smoke)
 
 Prints ``name,us_per_call,derived`` CSV.
 
@@ -14,16 +17,21 @@ Prints ``name,us_per_call,derived`` CSV.
 
 ``--json PATH`` additionally writes the rows as machine-readable records
 ``{"bench", "config", "us_per_call", "derived"}`` (the perf trajectory file
-committed as BENCH_attn.json; CI runs a fast-tier smoke of it).
+committed as BENCH_attn.json; CI runs a fast-tier smoke of it). An existing
+file is MERGED, not clobbered: rows whose (bench, config) the current run
+re-measured are replaced, everything else is kept — so the fast CI smoke
+(sched_cmp + ring_accounting) never erases the fig4/fig5 trajectory.
 """
 
 from __future__ import annotations
 
 import json
+import os
 import sys
 import time
 
-ALL = ("fig4_6_attn_speed", "nonmatmul_census", "table1_e2e", "roofline")
+ALL = ("fig4_6_attn_speed", "nonmatmul_census", "table1_e2e", "roofline",
+       "ring_accounting")
 
 
 def _records(csv_rows):
@@ -63,9 +71,16 @@ def main() -> None:
         print(f"# {name}: {len(csv) - before} rows in {dt:.1f}s", file=sys.stderr)
     print("\n".join(csv))
     if json_path:
+        records = _records(csv[1:])
+        fresh = {(r["bench"], r["config"]) for r in records}
+        if os.path.exists(json_path):
+            with open(json_path) as f:
+                kept = [r for r in json.load(f)
+                        if (r.get("bench"), r.get("config")) not in fresh]
+            records = kept + records
         with open(json_path, "w") as f:
-            json.dump(_records(csv[1:]), f, indent=1)
-        print(f"# wrote {json_path}", file=sys.stderr)
+            json.dump(records, f, indent=1)
+        print(f"# wrote {json_path} ({len(records)} rows)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -87,7 +87,9 @@ class ModelConfig:
     # --- numerics / sharding ------------------------------------------
     dtype: str = "bfloat16"  # activation/param compute dtype
     vocab_pad_to: int = 256
-    attn_sharding: str = "heads"  # 'heads' | 'sequence' (context parallel)
+    # 'heads' | 'sequence' (context parallel, KV all-gathered) | 'ring'
+    # (context parallel, KV sharded + rotated -- distributed/ring_attention)
+    attn_sharding: str = "heads"
     scan_layers: bool = True
     remat: bool = True
 

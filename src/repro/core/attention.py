@@ -50,7 +50,33 @@ def attention(
 
     segment_ids (B, S) int32 enables packed varlen semantics on every
     backend (self-attention over one packed layout: q and kv share ids).
+
+    Under ``attn_sharding='ring'`` rules (distributed/sharding.use_rules
+    with a >1-wide model axis), self-attention calls route to the
+    context-parallel ring implementation (distributed/ring_attention.py):
+    same math, KV sharded instead of gathered. Cross-attention
+    (Sq != Skv / q_offset) keeps the local path — its KV is encoder-sized
+    and the 'sequence' gather handles it.
     """
+    from repro.distributed.context_parallel import attn_context_mode
+
+    if (
+        attn_context_mode() == "ring"
+        and cfg.impl in ("flash_pallas", "flash_xla")  # 'ref' stays the oracle
+        and q.shape[1] == k.shape[1]
+        and spec.q_offset == 0
+    ):
+        if segment_ids is not None:
+            raise ValueError(
+                "packed (varlen) attention does not compose with "
+                "attn_sharding='ring' -- pack per data shard instead"
+            )
+        from repro.distributed.ring_attention import ring_flash_attention
+
+        return ring_flash_attention(
+            q, k, v, spec, impl=cfg.impl, scale=scale, block_q=cfg.block_q,
+            block_kv=cfg.block_kv, interpret=cfg.interpret, schedule=cfg.schedule,
+        )
     if cfg.impl == "ref":
         from repro.kernels.ref import attention_reference
 

@@ -19,7 +19,7 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 
 from repro.core.masks import DEFAULT_MASK_VALUE, MaskSpec
-from repro.core.online_softmax import combine_lse_outputs
+from repro.core.online_softmax import SoftmaxState, combine_lse_outputs, finalize
 
 
 def flash_decode(
@@ -84,11 +84,11 @@ def flash_decode(
     # Zero fully-masked splits (their m == MASK_VALUE -> p == 1 garbage).
     any_valid = jnp.any(valid, axis=-1)[:, None, None]  # (B, 1, 1, ns)
     l = jnp.where(any_valid, jnp.sum(p, axis=-1), 0.0)
-    o_part = jnp.einsum("bhgcs,bhcsd->bhgcd", p.astype(v_cache.dtype), vc,
-                        preferred_element_type=jnp.float32)
-    l_safe = jnp.where(l == 0.0, 1.0, l)
-    o_part = o_part / l_safe[..., None]
-    lse_part = jnp.where(l == 0.0, -jnp.inf, m + jnp.log(l_safe))
+    o_unscaled = jnp.einsum("bhgcs,bhcsd->bhgcd", p.astype(v_cache.dtype), vc,
+                            preferred_element_type=jnp.float32)
+    # Finalize each split with the shared online-softmax helper (l = 0 ->
+    # lse = -inf, so fully-masked splits vanish in the merge below).
+    o_part, lse_part = finalize(SoftmaxState(m=m, l=l, o=o_unscaled))
 
     # Merge the splits: associative combine over axis `ns`.
     o_parts = jnp.moveaxis(o_part, 3, 0)  # (ns, B, Hk, G, D)

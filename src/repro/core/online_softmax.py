@@ -65,6 +65,33 @@ def finalize(s: SoftmaxState):
     return o, lse
 
 
+def merge_partials(o_a, lse_a, o_b, lse_b):
+    """Pairwise merge of two *finalized* attention partials.
+
+    Each partial is the exact attention output over a subset of the keys,
+    already normalized, together with its row logsumexp:
+      o:   (..., rows, d)
+      lse: (..., rows)       -- -inf marks rows that saw no keys
+    Returns (o, lse) equivalent to attention over the union of the two key
+    sets. Associative and commutative (it is ``combine`` expressed on
+    finalized states), which is what lets split-KV decode merge in any tree
+    order and ring attention fold shards in ring order — THE shared merge
+    primitive for both (tests/test_ring.py checks associativity and the
+    split/merge roundtrip). An all -inf partial (e.g. a fully masked shard,
+    or the ring's initial accumulator) is the identity; garbage in its ``o``
+    is erased by the zero weight as long as it is finite.
+    """
+    m = jnp.maximum(lse_a, lse_b)
+    m_safe = jnp.where(jnp.isneginf(m), 0.0, m)
+    w_a = jnp.where(jnp.isneginf(lse_a), 0.0, jnp.exp(lse_a - m_safe))
+    w_b = jnp.where(jnp.isneginf(lse_b), 0.0, jnp.exp(lse_b - m_safe))
+    l = w_a + w_b
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o = (o_a * w_a[..., None] + o_b * w_b[..., None]) / l_safe[..., None]
+    lse = jnp.where(l == 0.0, -jnp.inf, m + jnp.log(l_safe))
+    return o, lse
+
+
 def combine_lse_outputs(o_parts: jnp.ndarray, lse_parts: jnp.ndarray):
     """Combine per-part *finalized* outputs using their LSEs.
 
@@ -73,13 +100,17 @@ def combine_lse_outputs(o_parts: jnp.ndarray, lse_parts: jnp.ndarray):
       o_parts:   (P, ..., rows, d)
       lse_parts: (P, ..., rows)
     Returns (o, lse) equivalent to attention over the concatenated KV.
+
+    Implemented as a balanced tree reduction of :func:`merge_partials` (the
+    halves merge vectorized), so the split-KV merge and the ring-attention
+    accumulation share one tested implementation.
     """
-    m = jnp.max(lse_parts, axis=0)
-    m_safe = jnp.where(jnp.isneginf(m), 0.0, m)
-    w = jnp.exp(lse_parts - m_safe)  # (P, ..., rows); exp(-inf)=0 handles empties
-    w = jnp.where(jnp.isneginf(lse_parts), 0.0, w)
-    l = jnp.sum(w, axis=0)
-    l_safe = jnp.where(l == 0.0, 1.0, l)
-    o = jnp.sum(o_parts * w[..., None], axis=0) / l_safe[..., None]
-    lse = m + jnp.log(l_safe)
-    return o, lse
+    o, lse = o_parts, lse_parts
+    while o.shape[0] > 1:
+        h = o.shape[0] // 2
+        o_m, lse_m = merge_partials(o[:h], lse[:h], o[h : 2 * h], lse[h : 2 * h])
+        if o.shape[0] % 2:
+            o_m = jnp.concatenate([o_m, o[2 * h :]], axis=0)
+            lse_m = jnp.concatenate([lse_m, lse[2 * h :]], axis=0)
+        o, lse = o_m, lse_m
+    return o[0], lse[0]

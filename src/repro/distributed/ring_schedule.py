@@ -1,0 +1,231 @@
+"""Ring-attention layout + per-step schedules (DESIGN.md Section 3).
+
+Ring flash attention keeps Q *and* KV sharded over the sequence: each device
+holds one Q shard forever and the KV shards rotate around the ring
+(``jax.lax.ppermute``), one shard per step. This module owns everything
+*static* about that:
+
+  * ``RingLayout`` — how the global sequence maps onto device-local shards.
+    Causal (and windowed) runs use **zigzag** sharding: the sequence is cut
+    into ``2P`` chunks and device ``d`` owns chunks ``(d, 2P-1-d)``, so every
+    device sees the same visible-tile count under a causal mask (the early
+    chunk's small triangle pairs with the late chunk's big one). Trivial
+    masks use plain contiguous sharding (1 chunk per device, no reorder).
+  * ``step_pairs`` — the static schedule for device ``d`` at ring step ``t``:
+    which (q_chunk, kv_chunk) rectangles are visible, and the per-rectangle
+    ``MaskSpec`` whose ``q_offset`` shifts local coordinates back to global
+    ones. A rectangle that ``tile_visibility`` classifies as empty is
+    *dropped here*, before tracing — a fully-masked ring step launches no
+    kernel at all. Inside a visible rectangle the PR-2 compact schedule
+    machinery (``kernels/schedule.build_tile_schedule``, keyed by the
+    rectangle's spec) skips the masked tiles: the mesh-level skip and the
+    grid-level skip are the same oracle at two granularities.
+  * accounting — per-device visible-tile counts (the zigzag balance
+    invariant, asserted by tests/test_ring.py) and comms/memory byte counts
+    for the ring-vs-all-gather tradeoff table (benchmarks/ring_accounting).
+
+Everything here is host-side python/numpy over *static* shapes; nothing is
+traced. ``distributed/ring_attention.py`` consumes it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, NamedTuple, Tuple
+
+import numpy as np
+
+from repro.core.masks import MaskSpec, tile_visibility
+
+
+class RingLayout(NamedTuple):
+    """Static sequence-to-shard layout for a P-device ring (hashable)."""
+
+    num_devices: int       # P
+    chunk: int             # C, tokens per chunk
+    chunks_per_device: int # 1 = contiguous, 2 = zigzag
+
+    @property
+    def seq_len(self) -> int:
+        return self.num_devices * self.shard_len
+
+    @property
+    def shard_len(self) -> int:
+        return self.chunks_per_device * self.chunk
+
+    @property
+    def num_chunks(self) -> int:
+        return self.num_devices * self.chunks_per_device
+
+    def device_chunks(self, d: int) -> Tuple[int, ...]:
+        """Global chunk ids owned by device ``d``, in local slot order."""
+        if self.chunks_per_device == 1:
+            return (d,)
+        return (d, self.num_chunks - 1 - d)
+
+    def permutation(self) -> np.ndarray:
+        """Global chunk order after layout reordering: entry ``s`` is the
+        global chunk id stored at chunk-slot ``s`` (device s // cpd,
+        slot s % cpd)."""
+        order = []
+        for d in range(self.num_devices):
+            order.extend(self.device_chunks(d))
+        return np.asarray(order, np.int32)
+
+
+def make_layout(seq_len: int, num_devices: int, spec: MaskSpec) -> RingLayout:
+    """Layout for a sequence of ``seq_len`` on a ``num_devices`` ring.
+
+    Zigzag (2 chunks/device) whenever the mask is non-trivial — that is what
+    equalizes per-device visible tiles under causal/window masks; a trivial
+    mask is uniform anyway, so contiguous sharding avoids the reorder.
+    """
+    cpd = 1 if spec.is_trivial else 2
+    div = num_devices * cpd
+    if seq_len % div != 0:
+        raise ValueError(
+            f"ring attention needs seq_len % (devices * {cpd}) == 0, got "
+            f"{seq_len} % {div} (pad the sequence or change the mesh)"
+        )
+    return RingLayout(num_devices=num_devices, chunk=seq_len // div,
+                      chunks_per_device=cpd)
+
+
+class StepPair(NamedTuple):
+    """One visible (q_chunk, kv_chunk) rectangle of a ring step."""
+
+    q_slot: int      # local slot of the q chunk on this device
+    kv_slot: int     # local slot of the kv chunk within the visiting shard
+    q_chunk: int     # global chunk id (q)
+    kv_chunk: int    # global chunk id (kv)
+    spec: MaskSpec   # rectangle-local mask spec (q_offset shifted)
+
+
+def kv_origin(layout: RingLayout, d: int, t: int) -> int:
+    """Device whose KV shard device ``d`` holds at ring step ``t``.
+
+    The rotation sends each shard to the next device every step
+    (``ppermute`` perm ``i -> (i+1) % P``), so after ``t`` steps device
+    ``d`` holds the shard that started on ``(d - t) % P``.
+    """
+    return (d - t) % layout.num_devices
+
+
+def _pair_spec(spec: MaskSpec, q_chunk: int, kv_chunk: int, C: int) -> MaskSpec:
+    """The MaskSpec for one rectangle, in rectangle-local coordinates.
+
+    The kernels see q rows 0..C and kv cols 0..C; shifting ``q_offset`` by
+    the chunk distance reproduces the global relative positions (causal and
+    window masks depend only on those). ``sink`` is the one absolute-position
+    feature: the global sink prefix intersected with this kv chunk.
+    """
+    q_off = spec.q_offset + (q_chunk - kv_chunk) * C
+    sink = max(0, min(spec.sink - kv_chunk * C, C)) if spec.sink else 0
+    return dataclasses.replace(spec, q_offset=q_off, sink=sink)
+
+
+def step_pairs(layout: RingLayout, spec: MaskSpec, d: int, t: int) -> List[StepPair]:
+    """Static schedule for device ``d`` at ring step ``t``: the visible
+    (q_chunk, kv_chunk) rectangles against the shard from
+    ``kv_origin(layout, d, t)``. Empty rectangles are dropped — a step whose
+    list is empty launches no kernels."""
+    C = layout.chunk
+    e = kv_origin(layout, d, t)
+    pairs: List[StepPair] = []
+    for a, cq in enumerate(layout.device_chunks(d)):
+        q_lo = spec.q_offset + cq * C
+        for b, ck in enumerate(layout.device_chunks(e)):
+            vis = tile_visibility(spec, q_lo, q_lo + C, ck * C, (ck + 1) * C)
+            if vis == "empty":
+                continue
+            pairs.append(StepPair(a, b, cq, ck, _pair_spec(spec, cq, ck, C)))
+    return pairs
+
+
+def uniform_steps(layout: RingLayout, spec: MaskSpec) -> bool:
+    """True when every device runs the identical static schedule at every
+    step (trivial mask, contiguous layout) — the per-device ``lax.switch``
+    dispatch in ring_attention collapses to a single branch."""
+    return spec.is_trivial and layout.chunks_per_device == 1
+
+
+# ---------------------------------------------------------------------------
+# Accounting (zigzag balance invariant + ring-vs-gather tradeoff table)
+# ---------------------------------------------------------------------------
+
+
+def visible_tile_counts(
+    layout: RingLayout, spec: MaskSpec, bq: int, bk: int
+) -> np.ndarray:
+    """Per-device visible (bq x bk) tile count summed over all ring steps.
+
+    This is the mesh-level work-partitioning ledger: under a causal mask the
+    zigzag layout makes these equal across devices to within one block
+    (tests/test_ring.py asserts max - min <= 1). Uses the same
+    ``_visible_pairs`` oracle the kernel schedules are checked against.
+    """
+    from repro.core.flash import _visible_pairs
+
+    C = layout.chunk
+    t_q = -(-C // bq)
+    t_kv = -(-C // bk)
+    counts = np.zeros(layout.num_devices, np.int64)
+    for d in range(layout.num_devices):
+        for t in range(layout.num_devices):
+            for pair in step_pairs(layout, spec, d, t):
+                counts[d] += len(_visible_pairs(pair.spec, t_q, t_kv, bq, bk)[0])
+    return counts
+
+
+def kernel_launch_counts(layout: RingLayout, spec: MaskSpec) -> np.ndarray:
+    """Per-device count of shard-rectangle kernel launches over a full ring
+    pass (a fully-masked step contributes zero — the 'skip without
+    launching' claim in numbers)."""
+    P = layout.num_devices
+    return np.asarray(
+        [sum(len(step_pairs(layout, spec, d, t)) for t in range(P)) for d in range(P)],
+        np.int64,
+    )
+
+
+def comm_bytes_per_device(
+    layout: RingLayout, kv_heads: int, head_dim: int, dtype_bytes: int,
+    *, backward: bool = False,
+) -> int:
+    """Bytes each device *sends* for one attention call's KV movement.
+
+    Forward ring: P-1 rotations of the local (K, V) shard. Backward ring:
+    P-1 (K, V) rotations plus P hops of the traveling f32 (dK, dV)
+    accumulators (the extra hop brings them home). The all-gather baseline
+    moves the same P-1 shards per device in one collective — the ring's
+    win is peak memory (2 shards resident instead of P) and compute/comms
+    overlap, not total bytes; see ``gather_bytes_per_device``.
+    """
+    shard = 2 * layout.shard_len * kv_heads * head_dim * dtype_bytes  # K + V
+    P = layout.num_devices
+    if not backward:
+        return (P - 1) * shard
+    dkv = 2 * layout.shard_len * kv_heads * head_dim * 4  # f32 accumulators
+    return (P - 1) * shard + P * dkv
+
+
+def gather_bytes_per_device(
+    layout: RingLayout, kv_heads: int, head_dim: int, dtype_bytes: int
+) -> int:
+    """Bytes each device sends for the 'sequence' mode KV all-gather."""
+    shard = 2 * layout.shard_len * kv_heads * head_dim * dtype_bytes
+    return (layout.num_devices - 1) * shard
+
+
+def peak_kv_bytes_per_device(
+    layout: RingLayout, kv_heads: int, head_dim: int, dtype_bytes: int,
+    *, mode: str,
+) -> int:
+    """Resident KV bytes per device: ring keeps the current + in-flight
+    shard (2/P of the sequence); gather materializes all P shards."""
+    shard = 2 * layout.shard_len * kv_heads * head_dim * dtype_bytes
+    if mode == "ring":
+        return 2 * shard
+    if mode == "gather":
+        return layout.num_devices * shard
+    raise ValueError(f"unknown mode: {mode!r}")

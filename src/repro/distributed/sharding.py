@@ -6,10 +6,14 @@ Model code never names mesh axes. It annotates activations/params with
 axes. ``use_rules(mesh, rules)`` installs a context; outside a context every
 constraint is a no-op, so models run unmodified on CPU tests.
 
-Two attention strategies (DESIGN.md Section 3):
+Three attention strategies (DESIGN.md Section 3):
   'heads'    : 'heads' -> 'model'; 'seq' unsharded.
   'sequence' : context parallelism -- 'seq' -> 'model' (FA2's C2 lifted to
-               the mesh); 'heads' unsharded.
+               the mesh); 'heads' unsharded; KV all-gathered per layer.
+  'ring'     : same activation sharding as 'sequence', but KV *stays*
+               sharded and rotates around the 'model' axis
+               (distributed/ring_attention.py) -- per-device KV memory is
+               O(S / P) instead of O(S).
 FSDP: parameter 'embed'/'ff' input dims additionally sharded over 'data'
 (all-gathered per scan step by XLA SPMD).
 """
@@ -27,10 +31,17 @@ _ctx = threading.local()
 
 
 class ShardingRules:
-    """logical axis name -> mesh axis (str | tuple | None)."""
+    """logical axis name -> mesh axis (str | tuple | None).
 
-    def __init__(self, table: Dict[str, object]):
+    ``attn_sharding`` records which attention strategy built the table so
+    runtime dispatch (context_parallel.attn_context_mode) can tell the
+    all-gather and ring context-parallel modes apart — they share the same
+    activation sharding.
+    """
+
+    def __init__(self, table: Dict[str, object], attn_sharding: str = "heads"):
         self.table = dict(table)
+        self.attn_sharding = attn_sharding
 
     def spec(self, *names: Optional[str]) -> P:
         return P(*[self.table.get(n) if n else None for n in names])
@@ -51,8 +62,9 @@ def lm_rules(
     Divisibility-aware: kv heads / experts that don't divide the model axis
     fall back to replication (kv) or per-expert-FFN sharding (MoE); archs
     whose q heads don't divide use attn_sharding='sequence' (context
-    parallelism). batch=1 decode (long_500k) leaves `data` to the KV-seq
-    split instead of the batch.
+    parallelism) or 'ring' (the same activation layout with rotating KV
+    shards). batch=1 decode (long_500k) leaves `data` to the KV-seq split
+    instead of the batch.
     """
     if cfg is not None:
         attn_sharding = cfg.attn_sharding
@@ -68,7 +80,9 @@ def lm_rules(
         experts_ok = True
         has_ssm = False
         embed_2d_ok = True
-    seqsh = attn_sharding == "sequence"
+    if attn_sharding not in ("heads", "sequence", "ring"):
+        raise ValueError(f"unknown attn_sharding: {attn_sharding!r}")
+    seqsh = attn_sharding in ("sequence", "ring")
     heads_ax = None if seqsh or not heads_ok else "model"
     kv_ax = None if seqsh or not kv_ok else "model"
     batch = (("pod", "data") if pods else ("data",))
@@ -108,7 +122,7 @@ def lm_rules(
         "p_inner": "model",
         "layers": None,
     }
-    return ShardingRules(t)
+    return ShardingRules(t, attn_sharding=attn_sharding)
 
 
 @contextlib.contextmanager
@@ -141,3 +155,23 @@ def named_sharding(*names: Optional[str]) -> Optional[NamedSharding]:
         return None
     mesh, rules = state
     return NamedSharding(mesh, rules.spec(*names))
+
+
+def shard_map(f, mesh: Mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` (replication checks off).
+
+    ``jax.shard_map(check_vma=...)`` only exists on newer jax; older
+    releases ship ``jax.experimental.shard_map.shard_map(check_rep=...)``.
+    The manual-collective bodies here (MoE expert parallelism, ring
+    attention) always want the replication checker off — ppermute/psum
+    patterns it cannot verify.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )

@@ -48,6 +48,7 @@ __all__ = [
     "TileSchedule",
     "build_tile_schedule",
     "flash_attention_pallas",
+    "flash_attention_pallas_shard_bwd",
     "flash_attention_pallas_varlen",
     "flash_attention_pallas_varlen_with_lse",
     "flash_attention_pallas_with_lse",
@@ -312,6 +313,52 @@ def flash_attention_pallas_with_lse(
         interpret=interpret, schedule=schedule,
     )
     return _fwd_with_lse(q, k, v, cfg)
+
+
+def flash_attention_pallas_shard_bwd(
+    q, k, v, o, lse, do, spec: MaskSpec = MaskSpec(causal=True), *,
+    scale: Optional[float] = None, block_q: int = 512, block_kv: int = 512,
+    interpret: Optional[bool] = None, schedule: str = "compact",
+):
+    """Shard-local Algorithm 2 against an externally merged (o, lse).
+
+    The ring-attention backward (distributed/ring_attention.py) replays each
+    (q_shard, kv_shard) rectangle it visited in the forward and needs that
+    rectangle's (dq, dk, dv) contribution computed with the *globally*
+    merged softmax statistics: ``lse`` (B, Hq, Sq) f32 is the final merged
+    logsumexp over ALL keys, and ``o`` (B, Sq, Hq, D) the final merged
+    output (so ``delta = rowsum(dO o O)``, Algorithm 2 line 4, is the global
+    row term). With those, ``P = exp(S_rect - lse)`` is exactly this
+    rectangle's slice of the global probability matrix, and the three bwd
+    kernels run their ordinary compact schedule restricted to the
+    rectangle's spec. Summing the returned (dq, dk, dv) over rectangles (as
+    the ring does) reproduces the single-device backward.
+
+    There is no ``custom_vjp`` here on purpose — the caller IS a vjp; this
+    is a direct kernel entry on one shard pair. Returns (dq, dk, dv) in the
+    input dtypes (ring accumulates them in f32).
+    """
+    cfg = PallasFlashConfig(
+        spec=spec, block_q=block_q, block_kv=block_kv, scale=scale,
+        interpret=interpret, schedule=schedule,
+    )
+    qh, kh, vh, _, _, m, meta = _prep_call(q, k, v, cfg)
+    oh = _heads_layout(o.astype(jnp.float32))
+    doh = _heads_layout(do.astype(jnp.float32))
+    lse_h = lse.astype(jnp.float32).reshape(m["B"] * m["Hq"], m["Sq"])
+    pad_q = m["Sqp"] - m["Sq"]
+    if pad_q:
+        # Padded rows carry do = 0 and lse = -inf -> every bwd term is 0.
+        oh = jnp.pad(oh, ((0, 0), (0, pad_q), (0, 0)))
+        doh = jnp.pad(doh, ((0, 0), (0, pad_q), (0, 0)))
+        lse_h = jnp.pad(lse_h, ((0, 0), (0, pad_q)), constant_values=-jnp.inf)
+    dqh, dkh, dvh = _core_bwd(qh, kh, vh, oh, lse_h, doh, meta)
+    # _core_bwd differentiates w.r.t. the pre-scaled q; fold the scale back.
+    dq = _unheads_layout(dqh[:, : m["Sq"]].astype(jnp.float32) * m["scale"],
+                         m["B"], m["Hq"])
+    dk = _unheads_layout(dkh[:, : m["Sk"]], m["B"], m["Hk"])
+    dv = _unheads_layout(dvh[:, : m["Sk"]], m["B"], m["Hk"])
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
 
 
 def flash_decode_pallas(

@@ -48,7 +48,7 @@ def attention_config(cfg, overrides: Optional[dict] = None) -> AttentionConfig:
     heads-sharded archs use packed causal tiles (block skipping visible)."""
     kw = dict(
         impl="flash_xla",
-        mode="dense" if cfg.attn_sharding == "sequence" else "packed",
+        mode="dense" if cfg.attn_sharding in ("sequence", "ring") else "packed",
         # 1024x1024 from the Section-Perf block sweep (EXPERIMENTS.md):
         # -18% memory term vs 512^2; 2048^2 gains only a further -7% while
         # quadrupling the S-tile working set.

@@ -22,7 +22,24 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(model_axis: int = 1):
-    """Tiny mesh over whatever devices exist (tests / examples on CPU)."""
+    """Tiny mesh over whatever devices exist (tests / examples on CPU).
+
+    Multi-device on a CPU host needs the devices *before* first jax use:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the CI
+    multidevice job and tests/test_ring.py run this way).
+    """
     n = len(jax.devices())
+    if n % model_axis != 0 or n < model_axis:
+        raise ValueError(
+            f"model_axis={model_axis} does not fit the {n} visible devices "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+        )
     data = n // model_axis
     return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def make_long_context_mesh():
+    """All visible devices on the 'model' axis (data=1): the layout for
+    context-parallel / ring-attention runs where one long sequence is the
+    whole workload (examples/long_context.py, ring benchmarks)."""
+    return make_host_mesh(model_axis=len(jax.devices()))

@@ -114,15 +114,17 @@ def build_prefill_step(cfg: ModelConfig, attn_cfg: AttentionConfig, cache_size: 
                 cfg, params, batch["frames"], batch["inputs"], attn_cfg, cache_size
             )
             logits = unembed(params["decoder"]["embed"], h_last, cfg.tie_embeddings)
+            lens = jnp.full((logits.shape[0],), tlen, jnp.int32)
         else:
-            h_last, caches, tlen = lm.prefill(
+            # batch['lens'] (B,) marks true token counts for bucket-padded
+            # prompts (ServingEngine admission); lm.prefill then selects the
+            # hidden at each row's last real position.
+            h_last, caches, lens = lm.prefill(
                 cfg, params, batch["inputs"], attn_cfg, cache_size,
-                patches=batch.get("patches"),
+                patches=batch.get("patches"), lens=batch.get("lens"),
             )
             logits = lm.logits_from_hidden(cfg, params, h_last)
         next_token = jnp.argmax(logits[..., : cfg.vocab_size], axis=-1).astype(jnp.int32)
-        B = next_token.shape[0]
-        lens = jnp.full((B,), tlen, jnp.int32)
         return next_token, caches, lens
 
     return prefill_step

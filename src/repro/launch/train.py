@@ -17,6 +17,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import json
 import time
@@ -65,6 +66,12 @@ class TrainLoopConfig:
     log_every: int = 10
     seed: int = 0
     packed: bool = False  # varlen sequence packing (segment-masked attention)
+    # Mesh: model_axis > 1 builds a (data, model) host mesh and installs
+    # sharding rules for the run. attn_sharding overrides the arch default:
+    # 'heads' | 'sequence' (all-gather context parallel) | 'ring'
+    # (KV-sharded context parallel -- distributed/ring_attention.py).
+    model_axis: int = 1
+    attn_sharding: Optional[str] = None
 
 
 def resolve_model(arch: Optional[str], preset: Optional[str], reduce: bool) -> ModelConfig:
@@ -75,8 +82,41 @@ def resolve_model(arch: Optional[str], preset: Optional[str], reduce: bool) -> M
     return registry.reduce_config(cfg) if reduce else cfg
 
 
+def _mesh_context(cfg: ModelConfig, loop: TrainLoopConfig):
+    """The sharding context for the run: a (data, model) host mesh +
+    lm_rules when model_axis > 1, else a no-op. Entered around tracing AND
+    execution so `constrain` / the ring-attention route see the rules."""
+    if loop.model_axis <= 1:
+        return contextlib.nullcontext()
+    from repro.distributed.sharding import lm_rules, use_rules
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(model_axis=loop.model_axis)
+    rules = lm_rules(cfg, model_axis=loop.model_axis,
+                     batch_size=loop.batch_size)
+    stack = contextlib.ExitStack()
+    stack.enter_context(mesh)
+    stack.enter_context(use_rules(mesh, rules))
+    print(f"[train] mesh {dict(mesh.shape)} attn_sharding={cfg.attn_sharding}")
+    return stack
+
+
 def train(cfg: ModelConfig, loop: TrainLoopConfig, opt_cfg: Optional[AdamWConfig] = None):
     """Run the loop; returns (params, opt_state, history dict)."""
+    if loop.attn_sharding is not None:
+        if loop.model_axis <= 1:
+            raise ValueError(
+                f"--attn-sharding {loop.attn_sharding} needs --model-axis > 1 "
+                "(no mesh is built otherwise, so the flag would do nothing)"
+            )
+        # Applied to THE cfg (not a rules-local copy) so everything
+        # cfg-derived downstream (flops accounting, rules) sees the mode.
+        cfg = dataclasses.replace(cfg, attn_sharding=loop.attn_sharding)
+    with _mesh_context(cfg, loop):
+        return _train(cfg, loop, opt_cfg)
+
+
+def _train(cfg: ModelConfig, loop: TrainLoopConfig, opt_cfg: Optional[AdamWConfig] = None):
     opt_cfg = opt_cfg or AdamWConfig(total_steps=loop.steps)
     attn_cfg = AttentionConfig(impl=loop.attn_impl, block_q=256, block_kv=256, mode="auto")
     data = make_source(DataConfig(
@@ -151,13 +191,19 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--packed", action="store_true",
                     help="varlen sequence packing (segment-masked attention)")
+    ap.add_argument("--model-axis", type=int, default=1,
+                    help="model-axis width of the (data, model) host mesh")
+    ap.add_argument("--attn-sharding", default=None,
+                    choices=("heads", "sequence", "ring"),
+                    help="override the arch's attention sharding strategy")
     args = ap.parse_args()
 
     cfg = resolve_model(args.arch, args.preset, args.reduce)
     loop = TrainLoopConfig(
         steps=args.steps, seq_len=args.seq, batch_size=args.batch,
         microbatches=args.microbatches, attn_impl=args.attn, ckpt_dir=args.ckpt_dir,
-        packed=args.packed,
+        packed=args.packed, model_axis=args.model_axis,
+        attn_sharding=args.attn_sharding,
     )
     _, _, history = train(cfg, loop)
     first = np.mean(history["loss"][:5]) if history["loss"] else float("nan")

@@ -134,8 +134,11 @@ def apply_attention(
         k = apply_rope(k, positions, rope_theta)
     # Context parallelism (C2 at mesh level): gather KV once per layer; the
     # flash scan then runs sharded Q rows against full KV. No-op when the
-    # 'kv_seq' logical axis is unsharded (heads-sharded archs, CPU tests).
-    k, v = gather_kv(k, v)
+    # 'kv_seq' logical axis is unsharded (heads-sharded archs, CPU tests)
+    # and for ring-mode self-attention (KV stays sharded and rotates); a
+    # cross-attention call always keeps the gather -- the ring only covers
+    # Sq == Skv self-attention.
+    k, v = gather_kv(k, v, cross=x_kv is not None)
     k, v = _expand_gqa_for_sharding(cfg, k, v)
     o = attention(q, k, v, spec, attn_cfg, segment_ids=segment_ids)
     return _out(p, cfg, o)

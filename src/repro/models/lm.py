@@ -284,9 +284,23 @@ def logits_from_hidden(cfg, params, hidden):
 # ------------------------------------------------------------------ serving
 
 
-def prefill(cfg, params, tokens, attn_cfg: AttentionConfig, cache_size: int, patches=None):
-    """-> (hidden_last (B,1,d), caches, total_len). Caches are per-layer
-    trees stacked over groups; cache_size is the padded KV capacity."""
+def prefill(cfg, params, tokens, attn_cfg: AttentionConfig, cache_size: int,
+            patches=None, lens=None):
+    """-> (hidden_last (B,1,d), caches, lens_total (B,) int32). Caches are
+    per-layer trees stacked over groups; cache_size is the padded KV
+    capacity.
+
+    ``lens`` (B,) int32 marks the true token count per row when ``tokens``
+    is right-padded to a bucket length (serving admission): the returned
+    hidden is taken at each row's last *real* position and ``lens_total``
+    counts only real tokens (+ any prefix). Causality keeps padding out of
+    the real positions' attention, and the caller masks the padded cache
+    tail via its per-slot cache length. Not supported for SSM/hybrid
+    configs (recurrent state would consume the padding).
+    """
+    if lens is not None and cfg.ssm is not None:
+        raise ValueError("lens-padded prefill needs attention-only configs "
+                         "(SSM state crosses the padding)")
     h, positions, n_prefix = _embed_inputs(cfg, params, tokens, patches)
 
     def group_body(x, gp):
@@ -311,8 +325,13 @@ def prefill(cfg, params, tokens, attn_cfg: AttentionConfig, cache_size: int, pat
             h, c = prefill_layer(kind, params["tail"][i], cfg, h, positions, attn_cfg, cache_size)
             caches["tail"].append(c)
     h = L.apply_norm(params["ln_f"], h, cfg.norm_eps, cfg.norm)
-    total_len = h.shape[1]
-    return h[:, -1:], caches, total_len
+    B = h.shape[0]
+    if lens is None:
+        return h[:, -1:], caches, jnp.full((B,), h.shape[1], jnp.int32)
+    lens = lens.astype(jnp.int32)
+    last = (n_prefix + lens - 1)[:, None, None]  # (B,1,1) last real position
+    h_last = jnp.take_along_axis(h, jnp.broadcast_to(last, (B, 1, h.shape[2])), axis=1)
+    return h_last, caches, n_prefix + lens
 
 
 def decode_step(cfg, params, token, caches, cache_len, attn_cfg: AttentionConfig):

@@ -179,11 +179,13 @@ def apply_moe(p: dict, cfg, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
         y = jax.lax.psum(y.astype(jnp.bfloat16), "model")
         return y.reshape(Bl, Sl, d).astype(x_blk.dtype)
 
-    y = jax.shard_map(
+    # shd.shard_map: version-portable (jax.shard_map only exists on newer
+    # jax; 0.4.x ships jax.experimental.shard_map) with replication checks
+    # off -- the in-body psum is invisible to the checker.
+    y = shd.shard_map(
         shard_body,
         mesh=mesh,
         in_specs=(x_spec, P(None, None), w_spec, w_spec, wd_spec),
         out_specs=x_spec,
-        check_vma=False,
     )(x, p["router"], p["we_gate"], p["we_up"], p["we_down"])
     return y, aux

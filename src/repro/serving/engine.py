@@ -85,6 +85,9 @@ class ServingEngine:
         self.B = max_batch
         self.cache_size = cache_size
         self.prompt_pad = prompt_pad
+        # Prompt-length bucketing needs the lens-masked prefill, which is
+        # attention-only (an SSM's recurrent state would consume padding).
+        self._bucket = prompt_pad > 1 and cfg.ssm is None
         self._prefill = jax.jit(build_prefill_step(cfg, attn_cfg, cache_size))
         self._step = jax.jit(build_serve_step(cfg, attn_cfg))
         from repro.configs.registry import cache_specs
@@ -103,11 +106,26 @@ class ServingEngine:
         self.queue.append(req)
 
     def _admit(self, slot: int, req: Request):
-        # Unpadded single-sequence prefill: jit specializes per prompt
-        # length (production would bucket lengths + mask padding; the added
-        # MaskSpec machinery isn't needed for this engine's tests/examples).
-        prompt_arr = np.asarray(req.prompt, np.int32)[None]
-        tok, cache1, lens = self._prefill(self.params, {"inputs": jnp.asarray(prompt_arr)})
+        """Bucketed (B=1) prefill into ``slot``.
+
+        Prompts are right-padded to the next multiple of ``prompt_pad`` so
+        the jitted prefill compiles once per *bucket*, not once per prompt
+        length; ``lens`` tells the prefill where the real tokens end (the
+        hidden is read at the last real position, causality keeps padding
+        out of every real row's attention, and the padded cache tail sits
+        beyond ``cache_len`` so decode never sees it — the first generated
+        token simply overwrites it).
+        """
+        L = len(req.prompt)
+        pad_to = -(-L // self.prompt_pad) * self.prompt_pad if self._bucket else L
+        pad_to = min(pad_to, self.cache_size - 1)
+        assert L <= pad_to, f"prompt ({L}) exceeds cache capacity {self.cache_size}"
+        prompt_arr = np.zeros((1, pad_to), np.int32)
+        prompt_arr[0, :L] = req.prompt
+        batch = {"inputs": jnp.asarray(prompt_arr)}
+        if self._bucket:
+            batch["lens"] = jnp.asarray([L], jnp.int32)
+        tok, cache1, lens = self._prefill(self.params, batch)
         true_len = int(lens[0])
         self.caches = _tree_slot_write(self.caches, cache1, slot)
         self.cache_len = self.cache_len.at[slot].set(true_len)

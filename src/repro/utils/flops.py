@@ -165,7 +165,7 @@ def flash_kernel_bytes(
         return 0.0  # decode uses flash_decode; not substituted
     chips_data = data_axis * (2 if multi_pod else 1)
     B_l = max(shape.global_batch // chips_data, 1)
-    seqsh = cfg.attn_sharding == "sequence"
+    seqsh = cfg.attn_sharding in ("sequence", "ring")
     S = shape.seq_len
     D = cfg.head_dim
     dt = 2  # bf16

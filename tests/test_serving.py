@@ -72,6 +72,30 @@ def test_engine_batching_consistency(model):
     assert ref.generated == done[0].generated
 
 
+def test_engine_prompt_bucketing(model):
+    """Admission pads prompts to prompt_pad buckets: one prefill compilation
+    serves every length in the bucket, and the padded prefill generates
+    exactly what unpadded (prompt_pad=1) admission generates."""
+    cfg, params = model
+    prompts = [[5, 7], [3, 5, 7], [2, 4, 6, 8, 10], [1] * 7]
+    eng = ServingEngine(cfg, params, ATTN, max_batch=1, cache_size=64,
+                        prompt_pad=16)
+    exact = ServingEngine(cfg, params, ATTN, max_batch=1, cache_size=64,
+                          prompt_pad=1)
+    assert eng._bucket and not exact._bucket
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=list(p), max_new_tokens=4))
+        exact.submit(Request(rid=i, prompt=list(p), max_new_tokens=4))
+    done = eng.run(max_ticks=100)
+    done_exact = exact.run(max_ticks=100)
+    for i in range(len(prompts)):
+        assert done[i].generated == done_exact[i].generated, i
+    # 4 prompt lengths, one 16-wide bucket -> exactly one prefill compile;
+    # the unbucketed engine compiled once per distinct length.
+    assert eng._prefill._cache_size() == 1
+    assert exact._prefill._cache_size() == len({len(p) for p in prompts})
+
+
 def test_engine_slot_reuse(model):
     cfg, params = model
     eng = ServingEngine(cfg, params, ATTN, max_batch=1, cache_size=64)
