@@ -1,0 +1,19 @@
+"""Fused-vs-split Pallas backward comparison, standalone.
+
+The CI fast-tier benchmark smoke: runs ONLY the ``bwd_cmp_*`` rows of
+fig4_6_attn_speed (causal seq=2048 kernel-layer fwd+bwd, fused one-pass
+vs split 3-launch backward -- fused must win, asserted inside). ``python -m
+benchmarks.run --json BENCH_attn.json bwd_cmp``. Not in ``run.ALL`` --
+the full fig4_6 module already emits these rows, so running both would
+duplicate them.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.fig4_6_attn_speed import bwd_comparison
+
+
+def run(csv: List[str]) -> None:
+    bwd_comparison(csv)

@@ -98,6 +98,7 @@ def run(csv: List[str]) -> None:
                 )
 
     schedule_comparison(csv, key)
+    bwd_comparison(csv, key)
 
 
 def schedule_comparison(csv: List[str], key=None) -> None:
@@ -123,3 +124,70 @@ def schedule_comparison(csv: List[str], key=None) -> None:
             csv, (f"sched_cmp_fwd/{tag}", f"sched_cmp_fwdbwd/{tag}"),
             cfg, spec, q, k, v, seq, batch, True,
         )
+
+
+def bwd_comparison(csv: List[str], key=None) -> None:
+    """Fused one-pass vs split 3-launch Pallas backward (ISSUE 4).
+
+    Causal seq >= 512 (the acceptance shape), timed at the KERNEL layer:
+    one jit'd fwd+bwd over prepped (B*H, S, D) tensors per variant, so the
+    row isolates exactly what the fused kernel changes (launches, (s, p)
+    recompute, exp count, Q/dO streaming). The ``attention()``-layer grad
+    is NOT used here on purpose: interpret mode lowers each grid step to an
+    XLA while iteration that copies every carried array, and inside a full
+    ``jax.grad`` those copies dominate and wash out the kernel delta on a
+    small host. Fused must beat split -- asserted (interleaved min-of-N
+    timing), not just reported. Also the ``bwd_cmp`` module for CI.
+    """
+    import time as _t
+
+    from repro.kernels import flash_bwd as FB
+    from repro.kernels import flash_fwd as FF
+
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    seq, blk = 2048, 256
+    batch = max(1, TOKENS // seq)
+    BH = batch * HEADS
+    spec = MaskSpec(causal=True)
+    ks = jax.random.split(jax.random.fold_in(key, 11), 4)
+    qh, kh, vh, do = (
+        jax.random.normal(k_, (BH, seq, HEAD_DIM), jnp.float32) for k_ in ks
+    )
+    kw = dict(group=1, block_q=blk, block_kv=blk, kv_valid=seq)
+
+    def make(bwd):
+        def fn(qh, kh, vh, do):
+            o, lse = FF.flash_fwd(qh, kh, vh, spec, **kw)
+            if bwd == "fused":
+                dk, dv, dq = FB.flash_bwd_fused(
+                    qh, kh, vh, o, do, lse, spec, **kw
+                )
+            else:
+                delta = FB.flash_bwd_delta(o, do, block_q=blk)
+                lse_s = jnp.where(jnp.isneginf(lse), 0.0, lse)
+                dk, dv = FB.flash_bwd_dkv(qh, kh, vh, do, lse_s, delta, spec, **kw)
+                dq = FB.flash_bwd_dq(qh, kh, vh, do, lse_s, delta, spec, **kw)
+            return dq, dk, dv
+
+        return jax.jit(fn)
+
+    fns = {bwd: make(bwd) for bwd in ("split", "fused")}
+    for f in fns.values():  # compile + first-call warmup
+        jax.block_until_ready(f(qh, kh, vh, do))
+    times = {bwd: [] for bwd in fns}
+    for _ in range(5):  # interleaved min-of-N: robust to host contention
+        for bwd, f in fns.items():
+            t0 = _t.perf_counter()
+            jax.block_until_ready(f(qh, kh, vh, do))
+            times[bwd].append(_t.perf_counter() - t0)
+    best = {bwd: min(ts) for bwd, ts in times.items()}
+    for bwd in ("split", "fused"):
+        tag = f"flash_pallas/bwd={bwd}/causal=1/seq={seq}"
+        csv.append(
+            f"bwd_cmp_fwdbwd/{tag},{best[bwd]*1e6:.0f},"
+            f"{_flops(seq, batch, True, True)/best[bwd]/1e12:.4f} TFLOP/s"
+        )
+    assert best["fused"] < best["split"], (
+        "fused backward must beat the split baseline", best,
+    )

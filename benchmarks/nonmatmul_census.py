@@ -7,6 +7,12 @@ O(N) non-matmul work *per KV block*. We lower both variants and
   * count transcendental + divide elementwise FLOPs with the trip-aware HLO
     walker (XLA's own cost_analysis counts scan bodies once),
   * time both on CPU (same matmul FLOPs -> any delta is non-matmul work).
+
+The ``nonmatmul_bwd`` rows extend the census to the Pallas backward: the
+fused one-pass kernel must run EXACTLY one exp per visible tile
+(BH * n_vis * bq * bk transcendental elements -- asserted, not just
+reported), while the split baseline recomputes p in both dkv and dq and
+runs exactly two.
 """
 
 from __future__ import annotations
@@ -94,3 +100,69 @@ def run(csv: List[str]) -> None:
             f"c1_census/{name},{t*1e6:.0f},"
             f"transc={c['transcendentals']:.3e};div={c['divides']:.3e};matmul={c['flops']:.3e}"
         )
+
+    bwd_exp_census(csv)
+
+
+def bwd_exp_census(csv: List[str]) -> None:
+    """Backward exp census: fused one-pass vs split 3-launch Pallas bwd.
+
+    Runs the two backward variants on identical prepped residuals and counts
+    transcendental elements in the compiled (interpret-mode) HLO with the
+    trip-aware walker. Asserts the fused kernel's count is EXACTLY
+    ``BH * n_visible_tiles * bq * bk`` (one exp per visible tile) and the
+    split baseline's exactly double (dkv + dq each recompute p).
+    """
+    from repro.core.flash import _visible_pairs
+    from repro.kernels import flash_bwd as FB
+    from repro.kernels import flash_fwd as FF
+
+    B2, S2, H2, D2, BLK = 2, 256, 2, 32, 64
+    BH = B2 * H2
+    spec = MaskSpec(causal=True)
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    qh = jax.random.normal(ks[0], (BH, S2, D2), jnp.float32)
+    kh = jax.random.normal(ks[1], (BH, S2, D2), jnp.float32)
+    vh = jax.random.normal(ks[2], (BH, S2, D2), jnp.float32)
+    do = jax.random.normal(ks[3], (BH, S2, D2), jnp.float32)
+    o, lse = FF.flash_fwd(
+        qh, kh, vh, spec, group=1, block_q=BLK, block_kv=BLK, kv_valid=S2
+    )
+    kw = dict(group=1, block_q=BLK, block_kv=BLK, kv_valid=S2)
+
+    def fused(qh, kh, vh, o, do, lse):
+        return FB.flash_bwd_fused(qh, kh, vh, o, do, lse, spec, **kw)
+
+    def split(qh, kh, vh, o, do, lse):
+        delta = FB.flash_bwd_delta(o, do, block_q=BLK)
+        lse_s = jnp.where(jnp.isneginf(lse), 0.0, lse)
+        dk, dv = FB.flash_bwd_dkv(qh, kh, vh, do, lse_s, delta, spec, **kw)
+        dq = FB.flash_bwd_dq(qh, kh, vh, do, lse_s, delta, spec, **kw)
+        return dq, dk, dv
+
+    t = S2 // BLK
+    n_vis = len(_visible_pairs(spec, t, t, BLK, BLK)[0])
+    one_exp_per_tile = BH * n_vis * BLK * BLK
+    counts = {}
+    for name, fn in (("fused", fused), ("split", split)):
+        c = _census(fn, qh, kh, vh, o, do, lse)
+        counts[name] = c["transcendentals"]
+        jit = jax.jit(fn)
+        jax.block_until_ready(jit(qh, kh, vh, o, do, lse))
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(jit(qh, kh, vh, o, do, lse))
+        dt = (time.perf_counter() - t0) / 5
+        csv.append(
+            f"nonmatmul_bwd/{name},{dt*1e6:.0f},"
+            f"exp_elems={c['transcendentals']:.3e};exp_per_tile="
+            f"{c['transcendentals'] / one_exp_per_tile:.2f};matmul={c['flops']:.3e}"
+        )
+    assert counts["fused"] == one_exp_per_tile, (
+        "fused bwd must run exactly one exp per visible tile",
+        counts["fused"], one_exp_per_tile,
+    )
+    assert counts["split"] == 2 * one_exp_per_tile, (
+        "split bwd recomputes p twice per visible tile",
+        counts["split"], one_exp_per_tile,
+    )

@@ -1,10 +1,15 @@
 """Benchmark harness: one module per paper table/figure.
 
   fig4_6_attn_speed   Fig. 4/5/6 -- attention speed, 3 impls x seq len
-                      (+ compact-vs-dense Pallas tile-schedule comparison)
+                      (+ compact-vs-dense Pallas tile-schedule comparison
+                      + fused-vs-split backward comparison)
   sched_cmp           the schedule comparison alone (CI fast-tier smoke;
                       not in ALL -- fig4_6_attn_speed already includes it)
+  bwd_cmp             the fused-vs-split backward comparison alone (CI
+                      fast-tier smoke; not in ALL for the same reason)
   nonmatmul_census    Section 3.1 C1 -- FA1-vs-FA2 non-matmul FLOP census
+                      (+ the backward exp census: one exp per visible tile
+                      fused, two split -- asserted)
   table1_e2e          Table 1 -- end-to-end GPT training throughput
   roofline            deliverable (g) -- dry-run roofline table
   ring_accounting     context-parallel ring vs all-gather: per-mode comms

@@ -26,10 +26,13 @@ from repro.core.masks import MaskSpec
 @dataclasses.dataclass(frozen=True)
 class AttentionConfig:
     impl: str = "flash_xla"  # 'ref' | 'flash_xla' | 'flash_pallas'
-    block_q: int = 512
-    block_kv: int = 512
+    # None -> shape-aware defaults (kernels/ops.default_block_sizes) on the
+    # Pallas path; the XLA scan path falls back to its fixed 512.
+    block_q: Optional[int] = None
+    block_kv: Optional[int] = None
     mode: str = "auto"  # tile schedule for flash_xla: 'dense' | 'packed' | 'auto'
     schedule: str = "compact"  # tile schedule for flash_pallas: 'compact' | 'dense'
+    bwd: str = "fused"  # flash_pallas backward: 'fused' (one-pass) | 'split'
     decode_splits: int = 8
     # Pallas interpret mode: None = auto (off on real TPUs, on elsewhere --
     # resolved in one place, kernels/compat.resolve_interpret).
@@ -75,7 +78,8 @@ def attention(
 
         return ring_flash_attention(
             q, k, v, spec, impl=cfg.impl, scale=scale, block_q=cfg.block_q,
-            block_kv=cfg.block_kv, interpret=cfg.interpret, schedule=cfg.schedule,
+            block_kv=cfg.block_kv, interpret=cfg.interpret,
+            schedule=cfg.schedule, bwd=cfg.bwd,
         )
     if cfg.impl == "ref":
         from repro.kernels.ref import attention_reference
@@ -83,8 +87,8 @@ def attention(
         return attention_reference(q, k, v, spec, scale=scale, segment_ids=segment_ids)[0]
     if cfg.impl == "flash_xla":
         return _flash.flash_attention(
-            q, k, v, spec, scale=scale, block_q=cfg.block_q, block_kv=cfg.block_kv,
-            mode=cfg.mode, segment_ids=segment_ids,
+            q, k, v, spec, scale=scale, block_q=cfg.block_q or 512,
+            block_kv=cfg.block_kv or 512, mode=cfg.mode, segment_ids=segment_ids,
         )
     if cfg.impl == "flash_pallas":
         if segment_ids is not None:
@@ -92,13 +96,14 @@ def attention(
 
             return flash_attention_pallas_varlen(
                 q, k, v, segment_ids, spec, scale=scale, block_q=cfg.block_q,
-                block_kv=cfg.block_kv, interpret=cfg.interpret, schedule=cfg.schedule,
+                block_kv=cfg.block_kv, interpret=cfg.interpret,
+                schedule=cfg.schedule, bwd=cfg.bwd,
             )
         from repro.kernels.ops import flash_attention_pallas
 
         return flash_attention_pallas(
             q, k, v, spec, scale=scale, block_q=cfg.block_q, block_kv=cfg.block_kv,
-            interpret=cfg.interpret, schedule=cfg.schedule,
+            interpret=cfg.interpret, schedule=cfg.schedule, bwd=cfg.bwd,
         )
     raise ValueError(f"unknown attention impl: {cfg.impl}")
 

@@ -65,11 +65,12 @@ class _RingMeta(NamedTuple):
     axis: str                    # ring mesh axis ('model')
     batch_axes: object           # mesh axes of the batch dim (str|tuple|None)
     impl: str                    # 'flash_pallas' | 'flash_xla'
-    block_q: int
-    block_kv: int
+    block_q: Optional[int]       # None -> ops.default_block_sizes (Pallas)
+    block_kv: Optional[int]
     scale: Optional[float]
     interpret: Optional[bool]
     schedule: str
+    bwd: str                     # Pallas backward: 'fused' | 'split'
 
 
 # ---------------------------------------------------------------------------
@@ -171,16 +172,20 @@ def _from_layout(x: jnp.ndarray, layout: rs.RingLayout) -> jnp.ndarray:
 
 def _rect_fwd(q, k, v, spec: MaskSpec, meta: _RingMeta):
     """(o (B,Sq,H,D), lse (B,H,Sq)) for one (q_chunk, kv_chunk) rectangle."""
-    kw = dict(scale=meta.scale, block_q=meta.block_q, block_kv=meta.block_kv)
     if meta.impl == "flash_pallas":
         from repro.kernels.ops import flash_attention_pallas_with_lse
 
         return flash_attention_pallas_with_lse(
-            q, k, v, spec, interpret=meta.interpret, schedule=meta.schedule, **kw
+            q, k, v, spec, scale=meta.scale, block_q=meta.block_q,
+            block_kv=meta.block_kv, interpret=meta.interpret,
+            schedule=meta.schedule,
         )
     from repro.core.flash import flash_attention_with_lse
 
-    return flash_attention_with_lse(q, k, v, spec, **kw)
+    return flash_attention_with_lse(
+        q, k, v, spec, scale=meta.scale, block_q=meta.block_q or 512,
+        block_kv=meta.block_kv or 512,
+    )
 
 
 def _rect_bwd(q, k, v, o, lse, do, spec: MaskSpec, meta: _RingMeta):
@@ -192,12 +197,12 @@ def _rect_bwd(q, k, v, o, lse, do, spec: MaskSpec, meta: _RingMeta):
         return flash_attention_pallas_shard_bwd(
             q, k, v, o, lse, do, spec, scale=meta.scale, block_q=meta.block_q,
             block_kv=meta.block_kv, interpret=meta.interpret,
-            schedule=meta.schedule,
+            schedule=meta.schedule, bwd=meta.bwd,
         )
     from repro.core.flash import FlashConfig, _bwd_impl
 
-    cfg = FlashConfig(spec=spec, block_q=meta.block_q, block_kv=meta.block_kv,
-                      scale=meta.scale)
+    cfg = FlashConfig(spec=spec, block_q=meta.block_q or 512,
+                      block_kv=meta.block_kv or 512, scale=meta.scale)
     return _bwd_impl(q, k, v, o, lse, do, cfg)
 
 
@@ -412,10 +417,11 @@ def ring_flash_attention(
     batch_axes: object = None,
     impl: str = "flash_pallas",
     scale: Optional[float] = None,
-    block_q: int = 512,
-    block_kv: int = 512,
+    block_q: Optional[int] = None,
+    block_kv: Optional[int] = None,
     interpret: Optional[bool] = None,
     schedule: str = "compact",
+    bwd: str = "fused",
 ) -> jnp.ndarray:
     """Differentiable ring flash attention over the ``axis`` mesh axis.
 
@@ -428,6 +434,8 @@ def ring_flash_attention(
     ``impl`` picks the shard-local kernel: the Pallas kernels
     (``flash_attention_pallas_with_lse`` + the shard bwd entry) or the XLA
     flash scan — both emit the lane-major lse the ring merge consumes.
+    ``bwd`` (Pallas only) picks each rectangle's backward: the fused
+    one-pass kernel (default) or the 3-launch split baseline.
     """
     if q.shape[1] != k.shape[1] or spec.q_offset != 0:
         raise ValueError(
@@ -450,12 +458,13 @@ def ring_flash_attention(
 
             return flash_attention_pallas(
                 q, k, v, spec, scale=scale, block_q=block_q, block_kv=block_kv,
-                interpret=interpret, schedule=schedule,
+                interpret=interpret, schedule=schedule, bwd=bwd,
             )
         from repro.core.flash import flash_attention
 
         return flash_attention(
-            q, k, v, spec, scale=scale, block_q=block_q, block_kv=block_kv
+            q, k, v, spec, scale=scale, block_q=block_q or 512,
+            block_kv=block_kv or 512,
         )
     layout = rs.make_layout(q.shape[1], num, spec)
     if isinstance(batch_axes, list):
@@ -463,6 +472,6 @@ def ring_flash_attention(
     meta = _RingMeta(
         spec=spec, layout=layout, mesh=mesh, axis=axis, batch_axes=batch_axes,
         impl=impl, block_q=block_q, block_kv=block_kv, scale=scale,
-        interpret=interpret, schedule=schedule,
+        interpret=interpret, schedule=schedule, bwd=bwd,
     )
     return _ring(q, k, v, meta)

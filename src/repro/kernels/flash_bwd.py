@@ -2,32 +2,39 @@
 
 GPU->TPU adaptation (DESIGN.md Section 2): the paper parallelizes the
 backward over *column* (KV) blocks, with thread blocks doing **atomic adds**
-into dQ. TPUs have no HBM atomics, so we split into two kernels -- the
-standard TPU flash scheme:
+into dQ. TPUs have no HBM atomics; two TPU realizations live here:
 
-  * ``dkv`` kernel -- each (bh, j) owns one KV block (the paper's column-
-    block worker, Fig. 2 right); the sequential axes stream Q/dO blocks past
-    it, accumulating dK_j, dV_j in VMEM scratch (Algorithm 2 lines 12, 16)
-    -- and summing over the GQA group g, the paper's "sum dK/dV across
-    duplicated heads".
-  * ``dq`` kernel -- each (bh, i) owns one Q block; the inner KV loop
-    accumulates dQ_i in scratch (line 15). This replaces the atomic-add
-    cross-worker communication with a second pass that recomputes S -- extra
-    *matmul* FLOPs in exchange for zero communication, which is the paper's
-    own trade (matmul FLOPs are ~16x cheaper).
+  * ``bwd="fused"`` (default) -- :func:`flash_bwd_fused`, ONE kv-major
+    launch. Each (bh, j) owns a KV block; the sequential axis streams
+    visible Q tiles past it. Per tile, ``(s, p)`` is recomputed ONCE and
+    feeds all five streamed matmuls (dV, dP, dK, dQ plus the s recompute),
+    dK/dV accumulate in VMEM scratch across the KV run, and the tile's dQ
+    contribution is added to a revisited f32 output block (the atomic-add
+    replacement: the grid's step axis is ``"arbitrary"``/sequential, so
+    revisits are ordered and race-free). ``delta = rowsum(dO o O)`` is
+    fused into the q-row prologue: the schedule's STEP_QFIRST step for each
+    q tile zero-inits the dq block and computes delta into a lane-major
+    VMEM scratch row that later visits read back -- delta never exists in
+    HBM. 3 launches -> 1, one exp per visible tile instead of two, and
+    Q/dO/lse stream once instead of twice.
+  * ``bwd="split"`` -- the parity baseline: ``flash_bwd_delta`` +
+    ``flash_bwd_dkv`` (KV-stationary, scratch-accumulated, GQA-summed) +
+    ``flash_bwd_dq`` (Q-stationary, the paper's own recompute-vs-
+    communication trade). Two exps and two Q/dO streams per visible tile.
 
-Both kernels support two schedules (see flash_fwd.py / kernels/schedule.py):
+All kernels support two schedules (see flash_fwd.py / kernels/schedule.py):
 ``"compact"`` (default) flattens the visible tile pairs into a scalar-
-prefetched table -- kv-major for dkv (grid ``(BHk, n_steps, G)``), q-major
-for dq (grid ``(BH, n_steps)``) -- so masked-out tiles cost no grid steps
-and no DMAs; ``"dense"`` is the legacy visit-everything grid.
+prefetched table -- kv-major for dkv/fused (grid ``(BHk, n_steps, G)``),
+q-major for dq (grid ``(BH, n_steps)``) -- so masked-out tiles cost no grid
+steps and no DMAs; ``"dense"`` is the legacy visit-everything grid.
 
-Both kernels recompute P = exp(S - L) from the logsumexp only (C1b, line 11).
+All recompute P = exp(S - L) from the logsumexp only (C1b, line 11).
 Softmax statistics arrive LANE-MAJOR: lse and delta are ``(BH, Sqp)`` f32
 with the sequence on the 128-lane axis (BlockSpec ``(1, block_q)``) -- the
-memory-diet contract shared with flash_fwd.py. D = rowsum(dO o O) (line 4)
-is computed by :func:`flash_bwd_delta`, a one-pass Pallas kernel, instead of
-an XLA elementwise pass over the broadcast layout.
+memory-diet contract shared with flash_fwd.py. In the split backward,
+D = rowsum(dO o O) (line 4) is computed by :func:`flash_bwd_delta`, a
+one-pass Pallas kernel, instead of an XLA elementwise pass over the
+broadcast layout; the fused backward absorbs even that launch.
 """
 
 from __future__ import annotations
@@ -44,6 +51,7 @@ from repro.core.masks import DEFAULT_MASK_VALUE, MaskSpec
 from repro.kernels.compat import CompilerParams, resolve_interpret
 from repro.kernels.flash_fwd import _tile_mask, _visibility
 from repro.kernels.schedule import (
+    STEP_QFIRST,
     build_tile_schedule,
     decode_step_bits,
     segment_step_tables,
@@ -104,15 +112,15 @@ def flash_bwd_delta(o, do, *, block_q: int, interpret: Optional[bool] = None):
 # ---------------------------------------------------------------------------
 
 
-def _dkv_compute(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
-                 dk_scr, dv_scr, spec, i, j, bq, bk, kv_valid, needs_mask,
-                 q_seg, kv_seg):
-    q = q_ref[0]      # (bq, d), pre-scaled
-    k = k_ref[0]      # (bk, d)
-    v = v_ref[0]
-    do = do_ref[0]    # (bq, d)
-    lse = lse_ref[0][:, None]    # (bq, 1), lane-major source
-    delta = delta_ref[0][:, None]
+def _dkv_tile_math(q, k, v, do, lse, delta, dk_scr, dv_scr,
+                   spec, i, j, bq, bk, kv_valid, needs_mask, q_seg, kv_seg):
+    """Algorithm 2 lines 11-16 for one tile: accumulate dK_j, dV_j into the
+    run scratch and return dS (the dq kernel / fused kernel's input for
+    line 15). Shared by the split dkv kernel and the fused kernel so the
+    bitwise fused==split parity contract has a single source of truth.
+
+    q (bq, d) pre-scaled; lse/delta (bq, 1) f32 columns.
+    """
     p, _ = _recompute_p(
         q, k, lse, spec, i, j, bq, bk, kv_valid, needs_mask, q_seg, kv_seg
     )  # line 11
@@ -131,6 +139,18 @@ def _dkv_compute(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
     dk_scr[...] += jax.lax.dot_general(
         ds.astype(q.dtype), q, (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
+    )
+    return ds
+
+
+def _dkv_compute(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                 dk_scr, dv_scr, spec, i, j, bq, bk, kv_valid, needs_mask,
+                 q_seg, kv_seg):
+    _dkv_tile_math(
+        q_ref[0], k_ref[0], v_ref[0], do_ref[0],
+        lse_ref[0][:, None], delta_ref[0][:, None],  # lane-major sources
+        dk_scr, dv_scr, spec, i, j, bq, bk, kv_valid, needs_mask,
+        q_seg, kv_seg,
     )
 
 
@@ -546,4 +566,298 @@ def flash_bwd_dq(
         cost_estimate=cost,
         interpret=interpret,
         name="fa2_bwd_dq_compact_varlen" if has_segments else "fa2_bwd_dq_compact",
+    )(*scalar_args, *inputs)
+
+
+# ---------------------------------------------------------------------------
+# Fused one-pass backward: delta + dK + dV + dQ in a single launch
+# ---------------------------------------------------------------------------
+#
+# kv-major like the dkv kernel, but the step body also emits the tile's dQ
+# contribution, so (s, p) is recomputed once per visible tile instead of
+# twice and Q/dO/lse tiles stream once instead of twice. dQ lives in an f32
+# OUTPUT revisited across the sequential axis ("arbitrary" semantics: steps
+# run in order, and an output block whose index map returns to a previously
+# written block sees the written values -- the interpret-mode executor
+# carries outputs block-by-block, and the Mosaic pipeline re-fetches a
+# non-immediately-revisited window). The schedule's STEP_QFIRST bit marks
+# each q tile's first visit: zero the dq block and compute
+# delta = rowsum(dO o O) into a lane-major VMEM scratch row, keyed by
+# (g, q_tile) so it survives the revisits of that q tile later in the
+# sweep; no separate flash_bwd_delta launch, no delta HBM array at all.
+
+
+def _fused_qrow_prologue(o_ref, do_ref, delta_scr, dq_ref, g, i, q_first):
+    """QFIRST work: delta = rowsum(dO o O) (Algorithm 2 line 4) + dq = 0.
+
+    Runs before the tile compute so the same step can consume the delta it
+    just wrote. Returns the (bq, 1) delta column for the current q tile.
+    """
+
+    @pl.when(q_first)
+    def _init():
+        delta_scr[g, i] = jnp.sum(
+            o_ref[0].astype(jnp.float32) * do_ref[0].astype(jnp.float32), axis=-1
+        )
+        dq_ref[0] = jnp.zeros_like(dq_ref[0])
+
+    return delta_scr[g, i][:, None]
+
+
+def _fused_compute(q_ref, k_ref, v_ref, do_ref, lse_ref, delta,
+                   dk_scr, dv_scr, dq_ref, spec, i, j, bq, bk, kv_valid,
+                   needs_mask, q_seg, kv_seg):
+    """One visible tile of the fused backward: 5 streamed matmuls total.
+
+    The (s, p) recompute and the dK/dV/dS math are the shared
+    :func:`_dkv_tile_math`; the fused kernel adds only the lse cleanup (the
+    split path does it outside the kernel) and the dQ contribution.
+    """
+    k = k_ref[0]      # (bk, d)
+    lse = lse_ref[0]  # (bq,), lane-major source
+    # Fully-masked rows carry lse = -inf; zero it so exp(S - lse) stays 0
+    # (S is DEFAULT_MASK_VALUE there) instead of producing inf.
+    lse = jnp.where(jnp.isneginf(lse), 0.0, lse)[:, None]
+    ds = _dkv_tile_math(
+        q_ref[0], k, v_ref[0], do_ref[0], lse, delta,
+        dk_scr, dv_scr, spec, i, j, bq, bk, kv_valid, needs_mask,
+        q_seg, kv_seg,
+    )
+    # dQ_i += dS K_j -- revisit-accumulated in the f32 output   (line 15)
+    dq_ref[0] += jax.lax.dot_general(
+        ds.astype(k.dtype), k, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _fused_kernel_dense(
+    *refs,
+    spec: MaskSpec, bq: int, bk: int, t_q: int, group: int, kv_valid: int,
+    has_segments: bool = False,
+):
+    if has_segments:
+        (q_ref, k_ref, v_ref, do_ref, o_ref, lse_ref, qs_ref, ks_ref,
+         dk_ref, dv_ref, dq_ref, dk_scr, dv_scr, delta_scr) = refs
+        q_seg, kv_seg = qs_ref[0], ks_ref[0]
+    else:
+        (q_ref, k_ref, v_ref, do_ref, o_ref, lse_ref,
+         dk_ref, dv_ref, dq_ref, dk_scr, dv_scr, delta_scr) = refs
+        q_seg = kv_seg = None
+    j = pl.program_id(1)
+    g = pl.program_id(2)
+    i = pl.program_id(3)
+
+    @pl.when(jnp.logical_and(g == 0, i == 0))
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    # Dense q-row prologue: every (i, g) is first visited at j == 0.
+    delta = _fused_qrow_prologue(o_ref, do_ref, delta_scr, dq_ref, g, i, j == 0)
+
+    empty, needs_mask = _visibility(spec, i, j, bq, bk, kv_valid, q_seg, kv_seg)
+
+    @pl.when(~empty)
+    def _compute():
+        _fused_compute(q_ref, k_ref, v_ref, do_ref, lse_ref, delta,
+                       dk_scr, dv_scr, dq_ref, spec, i, j, bq, bk, kv_valid,
+                       needs_mask, q_seg, kv_seg)
+
+    @pl.when(jnp.logical_and(g == group - 1, i == t_q - 1))
+    def _emit():
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def _fused_kernel_compact(
+    *refs,
+    spec: MaskSpec, bq: int, bk: int, group: int, kv_valid: int, heads: int,
+    has_segments: bool = False,
+):
+    if has_segments:
+        (outer_ref, inner_ref, flags_ref, seg_ref,
+         q_ref, k_ref, v_ref, do_ref, o_ref, lse_ref, qs_ref, ks_ref,
+         dk_ref, dv_ref, dq_ref, dk_scr, dv_scr, delta_scr) = refs
+        q_seg, kv_seg = qs_ref[0], ks_ref[0]
+    else:
+        (outer_ref, inner_ref, flags_ref,
+         q_ref, k_ref, v_ref, do_ref, o_ref, lse_ref,
+         dk_ref, dv_ref, dq_ref, dk_scr, dv_scr, delta_scr) = refs
+        q_seg = kv_seg = None
+    bh = pl.program_id(0)
+    s = pl.program_id(1)
+    g = pl.program_id(2)
+    j = outer_ref[s]  # kv-major: the owned KV tile
+    i = inner_ref[s]  # streamed Q tile
+    flags = flags_ref[s]
+    active, first, last, needs_mask = decode_step_bits(
+        flags, seg_ref[bh // heads, s] if has_segments else None
+    )
+
+    @pl.when(jnp.logical_and(first, g == 0))
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    delta = _fused_qrow_prologue(
+        o_ref, do_ref, delta_scr, dq_ref, g, i, (flags & STEP_QFIRST) != 0
+    )
+
+    @pl.when(active)
+    def _compute():
+        _fused_compute(q_ref, k_ref, v_ref, do_ref, lse_ref, delta,
+                       dk_scr, dv_scr, dq_ref, spec, i, j, bq, bk, kv_valid,
+                       needs_mask, q_seg, kv_seg)
+
+    @pl.when(jnp.logical_and(last, g == group - 1))
+    def _emit():
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_bwd_fused(
+    q, k, v, o, do, lse, spec: MaskSpec, *,
+    group: int, block_q: int, block_kv: int, kv_valid: int,
+    q_seg=None, kv_seg=None, interpret: Optional[bool] = None,
+    schedule: str = "compact",
+):
+    """One-pass Algorithm 2: (dk, dv, dq) from a single pallas_call.
+
+    q pre-scaled by 1/sqrt(d); o/do are the prepped (BH, Sqp, D) residual
+    and cotangent; lse is the RAW lane-major (BH, Sqp) f32 logsumexp (the
+    -inf cleanup for fully-masked rows happens in-kernel). Returns
+
+      dk, dv  (BHk, Skp, D) f32
+      dq      (BH, Sqp, D) f32, w.r.t. the *scaled* q
+
+    delta = rowsum(dO o O) never touches HBM at all: each q tile's first
+    visit computes its (block_q,) row into the lane-major (G, t_q, block_q)
+    VMEM scratch and revisits read it back from there. That scratch is
+    O(G * Sqp) f32 -- the caller (ops._resolve_bwd) falls back to
+    bwd="split" when it would not fit the VMEM budget.
+
+    Per visible tile this runs 5 matmuls and ONE exp; the split baseline
+    (delta + dkv + dq launches) runs 7 matmuls (+ the delta rowsum pass)
+    and two exps.
+    """
+    interpret = resolve_interpret(interpret)
+    BH, Sq, D = q.shape
+    BHk, Skp, _ = k.shape
+    t_q, t_kv = Sq // block_q, Skp // block_kv
+    has_segments = q_seg is not None
+    from repro.core.flash import _visible_pairs
+
+    n_vis = len(_visible_pairs(spec, t_q, t_kv, block_q, block_kv)[0])
+    cost = pl.CostEstimate(
+        flops=BH * n_vis * 2 * block_q * block_kv * D * 5,  # 5 matmuls/tile
+        bytes_accessed=2 * k.size * k.dtype.itemsize
+        + BH * n_vis * 3 * block_q * D * q.dtype.itemsize   # q, do, o tiles
+        + BH * n_vis * 2 * block_q * D * 4,                 # dq revisit r/w
+        transcendentals=BH * n_vis * block_q * block_kv,    # ONE exp/tile
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((BHk, Skp, D), jnp.float32),  # dk
+        jax.ShapeDtypeStruct((BHk, Skp, D), jnp.float32),  # dv
+        jax.ShapeDtypeStruct((BH, Sq, D), jnp.float32),    # dq (revisited)
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((block_kv, D), jnp.float32),             # dk run scratch
+        pltpu.VMEM((block_kv, D), jnp.float32),             # dv run scratch
+        pltpu.VMEM((group, t_q, block_q), jnp.float32),     # delta rows
+    ]
+
+    if schedule == "dense":
+        kernel = functools.partial(
+            _fused_kernel_dense, spec=spec, bq=block_q, bk=block_kv, t_q=t_q,
+            group=group, kv_valid=kv_valid, has_segments=has_segments,
+        )
+        qspec = pl.BlockSpec(
+            (1, block_q, D), lambda bh, j, g, i, grp=group: (bh * grp + g, i, 0)
+        )
+        lspec = pl.BlockSpec(
+            (1, block_q), lambda bh, j, g, i, grp=group: (bh * grp + g, i)
+        )
+        kvspec = pl.BlockSpec((1, block_kv, D), lambda bh, j, g, i: (bh, j, 0))
+        in_specs = [qspec, kvspec, kvspec, qspec, qspec, lspec]
+        inputs = [q, k, v, do, o, lse]
+        if has_segments:
+            heads = BHk // q_seg.shape[0]
+            in_specs += [
+                pl.BlockSpec((1, block_q), lambda bh, j, g, i, h=heads: (bh // h, i)),
+                pl.BlockSpec((1, block_kv), lambda bh, j, g, i, h=heads: (bh // h, j)),
+            ]
+            inputs += [q_seg, kv_seg]
+        return pl.pallas_call(
+            kernel,
+            grid=(BHk, t_kv, group, t_q),
+            in_specs=in_specs,
+            out_specs=[kvspec, kvspec, qspec],
+            out_shape=out_shape,
+            scratch_shapes=scratch_shapes,
+            compiler_params=CompilerParams(
+                # j is sequential here (dq accumulates across KV runs) --
+                # the dense-fused baseline gives up dkv's parallel j axis.
+                dimension_semantics=("parallel", "arbitrary", "arbitrary", "arbitrary"),
+            ),
+            cost_estimate=cost,
+            interpret=interpret,
+            name="fa2_bwd_fused_varlen" if has_segments else "fa2_bwd_fused",
+        )(*inputs)
+
+    if schedule != "compact":
+        raise ValueError(f"unknown tile schedule: {schedule!r}")
+    sched = build_tile_schedule(
+        spec, t_q, t_kv, block_q, block_kv, kv_valid, kv_major=True
+    )
+    heads = BHk // q_seg.shape[0] if has_segments else 1
+    kernel = functools.partial(
+        _fused_kernel_compact, spec=spec, bq=block_q, bk=block_kv, group=group,
+        kv_valid=kv_valid, heads=heads, has_segments=has_segments,
+    )
+    qspec = pl.BlockSpec(
+        (1, block_q, D),
+        lambda bh, s, g, o_, i_, f_, *_, grp=group: (bh * grp + g, i_[s], 0),
+    )
+    lspec = pl.BlockSpec(
+        (1, block_q),
+        lambda bh, s, g, o_, i_, f_, *_, grp=group: (bh * grp + g, i_[s]),
+    )
+    kvspec = pl.BlockSpec(
+        (1, block_kv, D), lambda bh, s, g, o_, i_, f_, *_: (bh, o_[s], 0)
+    )
+    in_specs = [qspec, kvspec, kvspec, qspec, qspec, lspec]
+    scalar_args = [
+        jnp.asarray(sched.outer), jnp.asarray(sched.inner), jnp.asarray(sched.flags)
+    ]
+    inputs = [q, k, v, do, o, lse]
+    if has_segments:
+        scalar_args.append(
+            segment_step_tables(q_seg, kv_seg, sched, block_q, block_kv, kv_major=True)
+        )
+        in_specs += [
+            pl.BlockSpec(
+                (1, block_q), lambda bh, s, g, o_, i_, f_, t_, h=heads: (bh // h, i_[s])
+            ),
+            pl.BlockSpec(
+                (1, block_kv), lambda bh, s, g, o_, i_, f_, t_, h=heads: (bh // h, o_[s])
+            ),
+        ]
+        inputs += [q_seg, kv_seg]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(scalar_args),
+        grid=(BHk, sched.n_steps, group),
+        in_specs=in_specs,
+        out_specs=[kvspec, kvspec, qspec],
+        scratch_shapes=scratch_shapes,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        cost_estimate=cost,
+        interpret=interpret,
+        name="fa2_bwd_fused_compact_varlen" if has_segments else "fa2_bwd_fused_compact",
     )(*scalar_args, *inputs)

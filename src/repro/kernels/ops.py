@@ -17,11 +17,20 @@ Memory contract (DESIGN.md Section 2):
     it, the backward consumes it, decode's split merge reuses it) -- 128x
     fewer softmax-stat bytes than the old ``(BH, Sqp, LANES)`` broadcast,
     for both lse and delta.
-  * ``delta = rowsum(dO o O)`` is a one-pass Pallas kernel
-    (``flash_bwd.flash_bwd_delta``), not an XLA elementwise pass.
+  * The backward is ``bwd="fused"`` by default: ONE kv-major pallas_call
+    (``flash_bwd.flash_bwd_fused``) producing dK, dV, dQ *and* delta --
+    (s, p) recomputed once per visible tile, delta fused into the q-row
+    prologue, dQ revisit-accumulated in an f32 output. ``bwd="split"``
+    keeps the 3-launch baseline (``flash_bwd_delta`` + ``flash_bwd_dkv`` +
+    ``flash_bwd_dq``) for parity and comparison.
   * Tile scheduling is ``schedule="compact"`` by default (see
     kernels/schedule.py); ``"dense"`` keeps the legacy visit-every-tile
     grid for comparison.
+  * Block sizes default to a shape-aware table (``default_block_sizes``):
+    clamped to the padded sequence length, ``block_kv`` shrinking as the
+    head dim grows so the fused backward's f32 dK/dV scratch plus streamed
+    tiles stay inside the VMEM budget. Pass explicit ``block_q``/
+    ``block_kv`` to override, exactly as before.
 """
 
 from __future__ import annotations
@@ -47,6 +56,7 @@ __all__ = [
     "PallasFlashConfig",
     "TileSchedule",
     "build_tile_schedule",
+    "default_block_sizes",
     "flash_attention_pallas",
     "flash_attention_pallas_shard_bwd",
     "flash_attention_pallas_varlen",
@@ -59,15 +69,18 @@ __all__ = [
 @dataclasses.dataclass(frozen=True)
 class PallasFlashConfig:
     spec: MaskSpec
-    block_q: int = 512
-    block_kv: int = 512
+    block_q: Optional[int] = None   # None -> default_block_sizes(...)
+    block_kv: Optional[int] = None
     scale: Optional[float] = None
     interpret: Optional[bool] = None  # None -> auto (off on TPU); compat.py
     schedule: str = "compact"  # 'compact' | 'dense' tile schedule
+    bwd: str = "fused"  # 'fused' (one-pass) | 'split' (delta + dkv + dq)
 
     def __post_init__(self):
         if self.schedule not in ("compact", "dense"):
             raise ValueError(f"unknown tile schedule: {self.schedule!r}")
+        if self.bwd not in ("fused", "split"):
+            raise ValueError(f"unknown backward mode: {self.bwd!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,11 +93,48 @@ class _KernelMeta:
     group: int
     kv_valid: int
     schedule: str
+    bwd: str
     interpret: Optional[bool]
 
 
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
+
+
+# The fused backward keeps every q tile's delta = rowsum(dO o O) row in a
+# (G, t_q, block_q) f32 VMEM scratch for the whole kv-major sweep -- an
+# O(G * padded_seq) term no block size can shrink. Past this budget the
+# fused kernel would blow the ~16 MB/core VMEM on real TPUs (interpret
+# mode never notices), so bwd="fused" silently degrades to the split
+# 3-launch baseline, which keeps delta in HBM.
+_FUSED_DELTA_VMEM_BUDGET = 2 * 1024 * 1024  # bytes; G * Sqp * 4 must fit
+
+
+def _resolve_bwd(bwd: str, group: int, seq_q_padded: int) -> str:
+    """Shape-aware backward-mode resolution (see _FUSED_DELTA_VMEM_BUDGET)."""
+    if bwd == "fused" and group * seq_q_padded * 4 > _FUSED_DELTA_VMEM_BUDGET:
+        return "split"
+    return bwd
+
+
+def default_block_sizes(seq_q: int, seq_kv: int, head_dim: int):
+    """Shape-aware default (block_q, block_kv) for the Pallas kernels.
+
+    The table keys off the head dim: the fused backward holds two f32
+    ``(block_kv, D)`` scratch tiles (dK, dV) plus the streamed q/do/o tiles
+    and the revisited f32 dq block in VMEM at once, so ``block_kv`` shrinks
+    as D grows to keep that working set inside the ~16 MB/core budget.
+    Both blocks clamp to the (8-aligned) padded sequence length so short
+    sequences never over-pad. Explicit ``block_q``/``block_kv`` arguments
+    override the table everywhere, exactly as before.
+    """
+    if head_dim <= 128:
+        bq, bk = 512, 512
+    elif head_dim <= 256:
+        bq, bk = 512, 256
+    else:
+        bq, bk = 256, 128
+    return min(bq, _round_up(seq_q, 8)), min(bk, _round_up(seq_kv, 8))
 
 
 def _heads_layout(x: jnp.ndarray) -> jnp.ndarray:
@@ -104,8 +154,11 @@ def _prep(q, k, v, cfg: PallasFlashConfig):
     assert Hq % Hk == 0
     G = Hq // Hk
     scale = cfg.scale if cfg.scale is not None else 1.0 / math.sqrt(D)
-    bq = cfg.block_q if Sq >= cfg.block_q else _round_up(Sq, 8)
-    bk = cfg.block_kv if Sk >= cfg.block_kv else _round_up(Sk, 8)
+    bq_def, bk_def = default_block_sizes(Sq, Sk, D)
+    bq = cfg.block_q if cfg.block_q is not None else bq_def
+    bk = cfg.block_kv if cfg.block_kv is not None else bk_def
+    bq = bq if Sq >= bq else _round_up(Sq, 8)
+    bk = bk if Sk >= bk else _round_up(Sk, 8)
     qh = _heads_layout(q)
     kh = _heads_layout(k)
     vh = _heads_layout(v)
@@ -135,7 +188,8 @@ def _prep_call(q, k, v, cfg: PallasFlashConfig, q_seg=None, kv_seg=None):
     qh, kh, vh, m = _prep(q, k, v, cfg)
     meta = _KernelMeta(
         spec=cfg.spec, block_q=m["bq"], block_kv=m["bk"], group=m["G"],
-        kv_valid=m["Sk"], schedule=cfg.schedule, interpret=cfg.interpret,
+        kv_valid=m["Sk"], schedule=cfg.schedule,
+        bwd=_resolve_bwd(cfg.bwd, m["G"], m["Sqp"]), interpret=cfg.interpret,
     )
     qs = ks = None
     if q_seg is not None:
@@ -160,19 +214,31 @@ def _core_fwd(qh, kh, vh, qs, ks, meta: _KernelMeta):
 
 
 def _core_bwd(qh, kh, vh, o, lse, do, meta: _KernelMeta, qs=None, ks=None):
-    """Algorithm 2 on prepped residuals; returns (dqh, dkh, dvh)."""
-    delta = _bwd.flash_bwd_delta(
-        o, do, block_q=meta.block_q, interpret=meta.interpret
-    )  # (BH, Sqp) f32: Algorithm 2 line 4
-    # Fully-masked rows carry lse = -inf; zero it so exp(S - lse) stays 0
-    # (S is DEFAULT_MASK_VALUE there) instead of producing inf.
-    lse_s = jnp.where(jnp.isneginf(lse), 0.0, lse)
+    """Algorithm 2 on prepped residuals; returns (dqh, dkh, dvh).
+
+    ``bwd="fused"``: one kv-major launch computes delta, dK, dV and dQ with
+    a single (s, p) recompute per visible tile. ``bwd="split"``: the
+    3-launch baseline (delta preprocess, then dkv and dq each recomputing
+    (s, p) for every tile they visit).
+    """
     doh = do.astype(qh.dtype)
     kw = dict(
         group=meta.group, block_q=meta.block_q, block_kv=meta.block_kv,
         kv_valid=meta.kv_valid, q_seg=qs, kv_seg=ks,
         interpret=meta.interpret, schedule=meta.schedule,
     )
+    if meta.bwd == "fused":
+        # Raw lse: the -inf cleanup for fully-masked rows happens in-kernel.
+        dk, dv, dq = _bwd.flash_bwd_fused(
+            qh, kh, vh, o, doh, lse, meta.spec, **kw
+        )
+        return dq.astype(qh.dtype), dk.astype(kh.dtype), dv.astype(vh.dtype)
+    delta = _bwd.flash_bwd_delta(
+        o, do, block_q=meta.block_q, interpret=meta.interpret
+    )  # (BH, Sqp) f32: Algorithm 2 line 4
+    # Fully-masked rows carry lse = -inf; zero it so exp(S - lse) stays 0
+    # (S is DEFAULT_MASK_VALUE there) instead of producing inf.
+    lse_s = jnp.where(jnp.isneginf(lse), 0.0, lse)
     dk, dv = _bwd.flash_bwd_dkv(qh, kh, vh, doh, lse_s, delta, meta.spec, **kw)
     dq = _bwd.flash_bwd_dq(qh, kh, vh, doh, lse_s, delta, meta.spec, **kw)
     # dq is w.r.t. the *scaled* q; the wrapper's prep transpose applies the
@@ -224,13 +290,20 @@ _flash_core_varlen.defvjp(_flash_core_varlen_fwd, _flash_core_varlen_bwd)
 
 def flash_attention_pallas(
     q, k, v, spec: MaskSpec = MaskSpec(causal=True), *,
-    scale: Optional[float] = None, block_q: int = 512, block_kv: int = 512,
+    scale: Optional[float] = None,
+    block_q: Optional[int] = None, block_kv: Optional[int] = None,
     interpret: Optional[bool] = None, schedule: str = "compact",
+    bwd: str = "fused",
 ):
-    """Differentiable FA2 via the Pallas TPU kernels. q (B,Sq,Hq,D)."""
+    """Differentiable FA2 via the Pallas TPU kernels. q (B,Sq,Hq,D).
+
+    ``bwd`` picks the backward: ``"fused"`` (one-pass kernel, default) or
+    ``"split"`` (delta + dkv + dq baseline). Block sizes default to the
+    shape-aware :func:`default_block_sizes` table.
+    """
     cfg = PallasFlashConfig(
         spec=spec, block_q=block_q, block_kv=block_kv, scale=scale,
-        interpret=interpret, schedule=schedule,
+        interpret=interpret, schedule=schedule, bwd=bwd,
     )
     qh, kh, vh, _, _, m, meta = _prep_call(q, k, v, cfg)
     o = _flash_core(qh, kh, vh, meta)
@@ -240,8 +313,9 @@ def flash_attention_pallas(
 def flash_attention_pallas_varlen(
     q, k, v, segment_ids, spec: MaskSpec = MaskSpec(causal=True), *,
     kv_segment_ids=None, scale: Optional[float] = None,
-    block_q: int = 512, block_kv: int = 512,
+    block_q: Optional[int] = None, block_kv: Optional[int] = None,
     interpret: Optional[bool] = None, schedule: str = "compact",
+    bwd: str = "fused",
 ):
     """Differentiable segment-packed (varlen) FA2 via the Pallas kernels.
 
@@ -270,7 +344,7 @@ def flash_attention_pallas_varlen(
     assert kv_segment_ids.shape == k.shape[:2], (kv_segment_ids.shape, k.shape)
     cfg = PallasFlashConfig(
         spec=spec, block_q=block_q, block_kv=block_kv, scale=scale,
-        interpret=interpret, schedule=schedule,
+        interpret=interpret, schedule=schedule, bwd=bwd,
     )
     qh, kh, vh, qs, ks, m, meta = _prep_call(q, k, v, cfg, segment_ids, kv_segment_ids)
     o = _flash_core_varlen(qh, kh, vh, qs, ks, meta)
@@ -288,7 +362,7 @@ def _fwd_with_lse(q, k, v, cfg, q_seg=None, kv_seg=None):
 def flash_attention_pallas_varlen_with_lse(
     q, k, v, segment_ids, spec: MaskSpec = MaskSpec(causal=True), *,
     kv_segment_ids=None, scale: Optional[float] = None,
-    block_q: int = 512, block_kv: int = 512,
+    block_q: Optional[int] = None, block_kv: Optional[int] = None,
     interpret: Optional[bool] = None, schedule: str = "compact",
 ):
     """Forward-only varlen (serving): returns (o, lse (B, Hq, Sq))."""
@@ -305,7 +379,8 @@ def flash_attention_pallas_varlen_with_lse(
 
 def flash_attention_pallas_with_lse(
     q, k, v, spec: MaskSpec = MaskSpec(causal=True), *,
-    scale: Optional[float] = None, block_q: int = 512, block_kv: int = 512,
+    scale: Optional[float] = None,
+    block_q: Optional[int] = None, block_kv: Optional[int] = None,
     interpret: Optional[bool] = None, schedule: str = "compact",
 ):
     cfg = PallasFlashConfig(
@@ -317,8 +392,10 @@ def flash_attention_pallas_with_lse(
 
 def flash_attention_pallas_shard_bwd(
     q, k, v, o, lse, do, spec: MaskSpec = MaskSpec(causal=True), *,
-    scale: Optional[float] = None, block_q: int = 512, block_kv: int = 512,
+    scale: Optional[float] = None,
+    block_q: Optional[int] = None, block_kv: Optional[int] = None,
     interpret: Optional[bool] = None, schedule: str = "compact",
+    bwd: str = "fused",
 ):
     """Shard-local Algorithm 2 against an externally merged (o, lse).
 
@@ -336,11 +413,13 @@ def flash_attention_pallas_shard_bwd(
 
     There is no ``custom_vjp`` here on purpose — the caller IS a vjp; this
     is a direct kernel entry on one shard pair. Returns (dq, dk, dv) in the
-    input dtypes (ring accumulates them in f32).
+    input dtypes (ring accumulates them in f32). ``bwd="fused"`` runs the
+    rectangle as ONE kernel launch (ring training inherits the fused win);
+    ``"split"`` keeps the 3-launch baseline.
     """
     cfg = PallasFlashConfig(
         spec=spec, block_q=block_q, block_kv=block_kv, scale=scale,
-        interpret=interpret, schedule=schedule,
+        interpret=interpret, schedule=schedule, bwd=bwd,
     )
     qh, kh, vh, _, _, m, meta = _prep_call(q, k, v, cfg)
     oh = _heads_layout(o.astype(jnp.float32))

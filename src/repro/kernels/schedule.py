@@ -49,6 +49,16 @@ STEP_ACTIVE = 1  # tile contributes compute (clear on placeholder steps)
 STEP_FIRST = 2   # first step of its outer-tile run -> init VMEM scratch
 STEP_LAST = 4    # last step of its outer-tile run -> finalize / emit
 STEP_MASKED = 8  # partial tile (or KV padding): apply the element mask
+# kv-major only (the fused one-pass backward, flash_bwd.flash_bwd_fused):
+# first/last visit of the *streamed q tile* anywhere in the flattened
+# schedule. The fused kernel consumes QFIRST (zero-init its revisited dq
+# output block + compute delta = rowsum(dO o O), so neither needs its own
+# pass). QLAST is schedule metadata only today: revisit-accumulation
+# writes dq on every visit, so there is no emit step -- the bit exists for
+# accounting (tests assert the pair brackets each q tile's visits) and for
+# an emit-style consumer (e.g. a variant that downcasts dq on last visit).
+STEP_QFIRST = 16
+STEP_QLAST = 32
 
 # Dynamic per-(batch, step) segment bits (segment_step_tables).
 SEG_ACTIVE = 1   # tile id ranges overlap (range-disjointness skip)
@@ -78,6 +88,15 @@ def build_tile_schedule(
     ``kv_valid`` is the unpadded KV length: tiles touching KV padding are
     flagged STEP_MASKED (never dropped -- the last tile always holds some
     real keys because padding is < one block).
+
+    kv-major schedules additionally carry STEP_QFIRST / STEP_QLAST on the
+    first / last step that streams each q tile (QFIRST drives the fused
+    backward's dq zero-init + delta prologue; QLAST is accounting metadata,
+    see the bit definitions above). A q tile no step streams
+    (possible under exotic window / q_offset specs: its row attends
+    nothing) gets an inactive placeholder appended at the tail so its dq
+    block is still zeroed and its delta still written; the tail placeholder
+    reuses the final outer tile, whose dk/dv windows were already emitted.
     """
     n_outer = t_kv if kv_major else t_q
     n_inner = t_q if kv_major else t_kv
@@ -107,6 +126,24 @@ def build_tile_schedule(
             inner.append(b)
             flags.append(f)
         n_active += len(run)
+    if kv_major:
+        # q-row visit bits for the fused backward (see docstring).
+        first_seen: dict = {}
+        last_seen: dict = {}
+        for s, b in enumerate(inner):
+            first_seen.setdefault(b, s)
+            last_seen[b] = s
+        tail = outer[-1] if outer else 0
+        for b in range(n_inner):
+            if b not in first_seen:
+                outer.append(tail)
+                inner.append(b)
+                flags.append(0)
+                first_seen[b] = last_seen[b] = len(inner) - 1
+        for s in first_seen.values():
+            flags[s] |= STEP_QFIRST
+        for s in last_seen.values():
+            flags[s] |= STEP_QLAST
     sched = TileSchedule(
         outer=np.asarray(outer, np.int32),
         inner=np.asarray(inner, np.int32),

@@ -1,0 +1,296 @@
+"""Fused one-pass backward (kernels/flash_bwd.flash_bwd_fused).
+
+Claims (ISSUE 4 / DESIGN.md Section 2):
+  (a) ``bwd="fused"`` is semantics-free: gradients are BITWISE equal to the
+      split baseline on f32 -- both run the same tile updates in the same
+      (kv-ascending) accumulation order -- and atol-close on bf16, across
+      specs x schedules x varlen x GQA;
+  (b) launch accounting: ``jax.grad`` over ``flash_attention_pallas``
+      contains exactly 2 pallas_calls in fused mode (fwd + fused bwd) and
+      4 in split mode (fwd + delta + dkv + dq);
+  (c) the kv-major schedule's STEP_QFIRST / STEP_QLAST bits mark each q
+      tile's first/last visit exactly once -- including q tiles no visible
+      step streams, which get tail placeholders so their dq block is still
+      zeroed (no NaN from the uninitialized revisited output);
+  (d) the ring shard-backward entry (`flash_attention_pallas_shard_bwd`)
+      dispatches both modes and they agree.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.masks import MaskSpec
+from repro.kernels.ops import (
+    default_block_sizes,
+    flash_attention_pallas,
+    flash_attention_pallas_shard_bwd,
+    flash_attention_pallas_varlen,
+    flash_attention_pallas_with_lse,
+)
+from repro.kernels.ref import attention_reference
+from repro.kernels.schedule import (
+    STEP_ACTIVE,
+    STEP_QFIRST,
+    STEP_QLAST,
+    build_tile_schedule,
+)
+
+KEY = jax.random.PRNGKey(11)
+
+SPECS = {
+    "causal": MaskSpec(causal=True),
+    "window": MaskSpec(causal=True, window=64),
+    "sink": MaskSpec(causal=True, window=64, sink=16),
+    "full": MaskSpec(),
+}
+
+
+def _mk(B, Sq, Sk, Hq, Hk, D, dtype=jnp.float32):
+    ks = jax.random.split(KEY, 4)
+    return (
+        jax.random.normal(ks[0], (B, Sq, Hq, D), dtype),
+        jax.random.normal(ks[1], (B, Sk, Hk, D), dtype),
+        jax.random.normal(ks[2], (B, Sk, Hk, D), dtype),
+        jax.random.normal(ks[3], (B, Sq, Hq, D), dtype),
+    )
+
+
+def _grads(q, k, v, do, spec, bwd, schedule="compact", segment_ids=None):
+    def loss(q, k, v):
+        if segment_ids is not None:
+            o = flash_attention_pallas_varlen(
+                q, k, v, segment_ids, spec, block_q=64, block_kv=64,
+                schedule=schedule, bwd=bwd,
+            )
+        else:
+            o = flash_attention_pallas(
+                q, k, v, spec, block_q=64, block_kv=64,
+                schedule=schedule, bwd=bwd,
+            )
+        return (o * do).sum()
+
+    return jax.grad(loss, (0, 1, 2))(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# (a) fused == split: bitwise on f32, atol on bf16
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec_name", ["causal", "window", "sink", "full"])
+def test_fused_matches_split_bitwise_f32(spec_name):
+    spec = SPECS[spec_name]
+    q, k, v, do = _mk(2, 192, 192, 4, 2, 32)  # GQA group 2
+    g_f = _grads(q, k, v, do, spec, "fused")
+    g_s = _grads(q, k, v, do, spec, "split")
+    for a, b, name in zip(g_f, g_s, "qkv"):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=f"d{name}/{spec_name}"
+        )
+    g_ref = jax.grad(
+        lambda q, k, v: (attention_reference(q, k, v, spec)[0] * do).sum(), (0, 1, 2)
+    )(q, k, v)
+    for a, r in zip(g_f, g_ref):
+        np.testing.assert_allclose(a, r, atol=2e-3, rtol=1e-3)
+
+
+def test_fused_matches_split_dense_schedule():
+    spec = SPECS["causal"]
+    q, k, v, do = _mk(2, 192, 192, 4, 2, 32)
+    g_f = _grads(q, k, v, do, spec, "fused", schedule="dense")
+    g_s = _grads(q, k, v, do, spec, "split", schedule="dense")
+    for a, b, name in zip(g_f, g_s, "qkv"):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=f"d{name}")
+    # and dense-fused == compact-fused (same tile updates, same order)
+    g_c = _grads(q, k, v, do, spec, "fused")
+    for a, c in zip(g_f, g_c):
+        np.testing.assert_allclose(a, c, atol=1e-5, rtol=1e-5)
+
+
+def test_fused_matches_split_bf16():
+    spec = SPECS["causal"]
+    q, k, v, do = _mk(2, 128, 128, 4, 2, 64, jnp.bfloat16)
+    g_f = _grads(q, k, v, do, spec, "fused")
+    g_s = _grads(q, k, v, do, spec, "split")
+    for a, b, name in zip(g_f, g_s, "qkv"):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=1e-2, rtol=1e-2, err_msg=f"d{name}",
+        )
+
+
+@pytest.mark.parametrize(
+    "spec_name", ["causal", pytest.param("full", marks=pytest.mark.slow)]
+)
+def test_fused_varlen_matches_split(spec_name):
+    spec = SPECS[spec_name]
+    B, S = 2, 192
+    q, k, v, do = _mk(B, S, S, 4, 2, 32)
+    rng = np.random.default_rng(5)
+    seg = np.zeros((B, S), np.int32)
+    for b in range(B):
+        cuts = np.sort(rng.choice(np.arange(8, S - 8), 2, replace=False))
+        seg[b, : cuts[0]] = 1
+        seg[b, cuts[0] : cuts[1]] = 2
+        seg[b, cuts[1] :] = 3 if b % 2 == 0 else 0
+    seg = jnp.asarray(seg)
+    g_f = _grads(q, k, v, do, spec, "fused", segment_ids=seg)
+    g_s = _grads(q, k, v, do, spec, "split", segment_ids=seg)
+    for a, b, name in zip(g_f, g_s, "qkv"):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=f"d{name}/{spec_name}"
+        )
+    g_ref = jax.grad(
+        lambda q, k, v: (
+            attention_reference(q, k, v, spec, segment_ids=seg)[0] * do
+        ).sum(),
+        (0, 1, 2),
+    )(q, k, v)
+    for a, r in zip(g_f, g_ref):
+        np.testing.assert_allclose(a, r, atol=2e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# (b) launch-count regression: 3 bwd launches -> 1
+# ---------------------------------------------------------------------------
+
+
+def _count_pallas_calls(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for sub in jax.core.jaxprs_in_params(eqn.params):
+            n += _count_pallas_calls(sub.jaxpr if hasattr(sub, "jaxpr") else sub)
+    return n
+
+
+@pytest.mark.parametrize("bwd,expected", [("fused", 2), ("split", 4)])
+def test_fwdbwd_launch_count(bwd, expected):
+    q, k, v, do = _mk(1, 128, 128, 2, 1, 32)
+    spec = MaskSpec(causal=True)
+
+    def loss(q, k, v):
+        return (
+            flash_attention_pallas(
+                q, k, v, spec, block_q=64, block_kv=64, bwd=bwd
+            ) * do
+        ).sum()
+
+    jaxpr = jax.make_jaxpr(jax.grad(loss, (0, 1, 2)))(q, k, v)
+    n = _count_pallas_calls(jaxpr.jaxpr)
+    assert n == expected, f"bwd={bwd}: expected {expected} pallas_calls, got {n}"
+
+
+# ---------------------------------------------------------------------------
+# (c) STEP_QFIRST / STEP_QLAST schedule bits
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec_name", ["causal", "window", "sink", "full"])
+def test_qrow_flags_cover_every_q_tile_once(spec_name):
+    spec = SPECS[spec_name]
+    t = 16
+    sched = build_tile_schedule(spec, t, t, 128, 128, t * 128, kv_major=True)
+    qfirst = sched.flags & STEP_QFIRST != 0
+    qlast = sched.flags & STEP_QLAST != 0
+    # every q tile gets exactly one QFIRST and one QLAST step...
+    assert sorted(sched.inner[qfirst].tolist()) == list(range(t))
+    assert sorted(sched.inner[qlast].tolist()) == list(range(t))
+    # ...and they bracket all of that tile's visits (kv runs ascend).
+    for b in range(t):
+        steps = np.nonzero(sched.inner == b)[0]
+        assert sched.flags[steps[0]] & STEP_QFIRST
+        assert sched.flags[steps[-1]] & STEP_QLAST
+    # q-major schedules don't carry the bits (q rows own their runs there).
+    qmaj = build_tile_schedule(spec, t, t, 128, 128, t * 128)
+    assert not (qmaj.flags & (STEP_QFIRST | STEP_QLAST)).any()
+
+
+def test_qrow_flags_unvisited_q_tiles_get_placeholders():
+    """A q row that attends nothing (window far past the KV) still needs its
+    dq block zeroed: tail placeholders carry QFIRST without ACTIVE."""
+    spec = MaskSpec(causal=True, window=64, q_offset=4096)
+    t = 4
+    sched = build_tile_schedule(spec, t, t, 64, 64, t * 64, kv_major=True)
+    assert sched.n_active == 0  # every tile is empty under this spec
+    qfirst = sched.flags & STEP_QFIRST != 0
+    assert sorted(sched.inner[qfirst].tolist()) == list(range(t))
+    assert not (sched.flags[qfirst] & STEP_ACTIVE).any()
+
+
+def test_fused_empty_spec_grads_are_zero_not_nan():
+    """End-to-end over the placeholder path: all-masked attention has zero
+    gradients, and the revisited dq output must not leak NaN."""
+    spec = MaskSpec(causal=True, window=64, q_offset=4096)
+    q, k, v, do = _mk(1, 128, 128, 2, 1, 32)
+    for bwd in ("fused", "split"):
+        g = _grads(q, k, v, do, spec, bwd)
+        for a, name in zip(g, "qkv"):
+            np.testing.assert_array_equal(
+                np.asarray(a), 0.0, err_msg=f"d{name}/{bwd}"
+            )
+
+
+# ---------------------------------------------------------------------------
+# (d) shard backward entry (the ring path) dispatches both modes
+# ---------------------------------------------------------------------------
+
+
+def test_shard_bwd_fused_matches_split():
+    spec = MaskSpec(causal=True)
+    q, k, v, do = _mk(2, 128, 128, 4, 2, 32)
+    o, lse = flash_attention_pallas_with_lse(q, k, v, spec, block_q=64, block_kv=64)
+    outs = {
+        bwd: flash_attention_pallas_shard_bwd(
+            q, k, v, o, lse, do, spec, block_q=64, block_kv=64, bwd=bwd
+        )
+        for bwd in ("fused", "split")
+    }
+    for a, b, name in zip(outs["fused"], outs["split"], ("dq", "dk", "dv")):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-6, rtol=1e-6, err_msg=name
+        )
+
+
+# ---------------------------------------------------------------------------
+# shape-aware default block sizes
+# ---------------------------------------------------------------------------
+
+
+def test_fused_falls_back_to_split_when_delta_scratch_too_big():
+    """The fused delta scratch is O(G * Sqp) VMEM; past the budget the
+    backward must silently degrade to split (delta in HBM) instead of
+    blowing VMEM on real TPUs."""
+    from repro.kernels.ops import _FUSED_DELTA_VMEM_BUDGET, _resolve_bwd
+
+    assert _resolve_bwd("fused", 1, 128) == "fused"
+    assert _resolve_bwd("fused", 1, _FUSED_DELTA_VMEM_BUDGET // 4) == "fused"
+    assert _resolve_bwd("fused", 1, _FUSED_DELTA_VMEM_BUDGET // 4 + 8) == "split"
+    assert _resolve_bwd("fused", 8, 128 * 1024) == "split"  # GQA multiplies
+    assert _resolve_bwd("split", 1, 128) == "split"
+
+
+def test_default_block_sizes_table():
+    assert default_block_sizes(4096, 4096, 64) == (512, 512)
+    assert default_block_sizes(4096, 4096, 256) == (512, 256)  # scratch diet
+    assert default_block_sizes(4096, 4096, 512) == (256, 128)
+    # clamped to the (8-aligned) padded sequence length
+    assert default_block_sizes(200, 200, 64) == (200, 200)
+    assert default_block_sizes(100, 4096, 64) == (104, 512)
+
+
+def test_default_blocks_run_end_to_end():
+    """block_q/block_kv omitted entirely: the heuristic path must be exact."""
+    spec = MaskSpec(causal=True)
+    q, k, v, do = _mk(1, 200, 200, 2, 1, 32)
+    o = flash_attention_pallas(q, k, v, spec)
+    o_ref, _ = attention_reference(q, k, v, spec)
+    np.testing.assert_allclose(o, o_ref, atol=3e-5, rtol=1e-4)
+    g = jax.grad(lambda q: (flash_attention_pallas(q, k, v, spec) * do).sum())(q)
+    g_ref = jax.grad(
+        lambda q: (attention_reference(q, k, v, spec)[0] * do).sum()
+    )(q)
+    np.testing.assert_allclose(g, g_ref, atol=2e-3, rtol=1e-3)

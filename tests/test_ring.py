@@ -266,6 +266,33 @@ def test_ring_parity_fwd_and_grads(rng, impl, desc):
 
 
 @multidevice
+def test_ring_grads_fused_vs_split_bwd(rng):
+    """The ring backward inherits the fused one-pass rectangle kernel
+    (ops.flash_attention_pallas_shard_bwd, bwd='fused' default): grads must
+    match the split-baseline ring bitwise-tight -- each rectangle runs the
+    same tile updates in the same order, and the ring folds them the same
+    way."""
+    from repro.distributed.ring_attention import ring_flash_attention
+
+    mesh = _mesh4()
+    q, k, v = _qkv(rng)
+    spec = MaskSpec(causal=True)
+
+    def grads(bwd):
+        def loss(q, k, v):
+            o = ring_flash_attention(
+                q, k, v, spec, mesh=mesh, impl="flash_pallas",
+                block_q=64, block_kv=64, bwd=bwd,
+            )
+            return (o ** 2).sum()
+
+        return jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+    for gf, gs, name in zip(grads("fused"), grads("split"), "qkv"):
+        assert_allclose(gf, gs, atol=1e-6, rtol=1e-6, msg=f"d{name}")
+
+
+@multidevice
 def test_ring_parity_bf16(rng):
     from repro.distributed.ring_attention import ring_flash_attention
 
