@@ -15,6 +15,10 @@
   ring_accounting     context-parallel ring vs all-gather: per-mode comms
                       bytes, peak KV bytes, step/launch counts (static
                       ledger; no timing -- also in the CI fast smoke)
+  occupancy_sweep     Fig. 5 analog -- forward partitioning (q-banded /
+                      unbanded compact / dense) over a B x H x S grid:
+                      grid-utilization ledger (asserted), kernel-layer
+                      timing, banded exp census (also in the CI smoke)
 
 Prints ``name,us_per_call,derived`` CSV.
 
@@ -36,7 +40,7 @@ import sys
 import time
 
 ALL = ("fig4_6_attn_speed", "nonmatmul_census", "table1_e2e", "roofline",
-       "ring_accounting")
+       "ring_accounting", "occupancy_sweep")
 
 
 def _records(csv_rows):

@@ -33,6 +33,11 @@ class AttentionConfig:
     mode: str = "auto"  # tile schedule for flash_xla: 'dense' | 'packed' | 'auto'
     schedule: str = "compact"  # tile schedule for flash_pallas: 'compact' | 'dense'
     bwd: str = "fused"  # flash_pallas backward: 'fused' (one-pass) | 'split'
+    # Forward occupancy partitioning (flash_pallas, compact schedule):
+    # None -> shape-aware auto (kernels/ops.default_forward_partitions);
+    # explicit ints override (1 disables).
+    num_q_bands: Optional[int] = None
+    kv_splits: Optional[int] = None
     decode_splits: int = 8
     # Pallas interpret mode: None = auto (off on real TPUs, on elsewhere --
     # resolved in one place, kernels/compat.resolve_interpret).
@@ -80,6 +85,7 @@ def attention(
             q, k, v, spec, impl=cfg.impl, scale=scale, block_q=cfg.block_q,
             block_kv=cfg.block_kv, interpret=cfg.interpret,
             schedule=cfg.schedule, bwd=cfg.bwd,
+            num_q_bands=cfg.num_q_bands, kv_splits=cfg.kv_splits,
         )
     if cfg.impl == "ref":
         from repro.kernels.ref import attention_reference
@@ -98,12 +104,14 @@ def attention(
                 q, k, v, segment_ids, spec, scale=scale, block_q=cfg.block_q,
                 block_kv=cfg.block_kv, interpret=cfg.interpret,
                 schedule=cfg.schedule, bwd=cfg.bwd,
+                num_q_bands=cfg.num_q_bands, kv_splits=cfg.kv_splits,
             )
         from repro.kernels.ops import flash_attention_pallas
 
         return flash_attention_pallas(
             q, k, v, spec, scale=scale, block_q=cfg.block_q, block_kv=cfg.block_kv,
             interpret=cfg.interpret, schedule=cfg.schedule, bwd=cfg.bwd,
+            num_q_bands=cfg.num_q_bands, kv_splits=cfg.kv_splits,
         )
     raise ValueError(f"unknown attention impl: {cfg.impl}")
 

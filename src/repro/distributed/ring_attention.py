@@ -71,6 +71,8 @@ class _RingMeta(NamedTuple):
     interpret: Optional[bool]
     schedule: str
     bwd: str                     # Pallas backward: 'fused' | 'split'
+    num_q_bands: Optional[int]   # fwd occupancy partitioning of each
+    kv_splits: Optional[int]     # rectangle kernel (None -> shape auto)
 
 
 # ---------------------------------------------------------------------------
@@ -178,7 +180,8 @@ def _rect_fwd(q, k, v, spec: MaskSpec, meta: _RingMeta):
         return flash_attention_pallas_with_lse(
             q, k, v, spec, scale=meta.scale, block_q=meta.block_q,
             block_kv=meta.block_kv, interpret=meta.interpret,
-            schedule=meta.schedule,
+            schedule=meta.schedule, num_q_bands=meta.num_q_bands,
+            kv_splits=meta.kv_splits,
         )
     from repro.core.flash import flash_attention_with_lse
 
@@ -422,6 +425,8 @@ def ring_flash_attention(
     interpret: Optional[bool] = None,
     schedule: str = "compact",
     bwd: str = "fused",
+    num_q_bands: Optional[int] = None,
+    kv_splits: Optional[int] = None,
 ) -> jnp.ndarray:
     """Differentiable ring flash attention over the ``axis`` mesh axis.
 
@@ -459,6 +464,7 @@ def ring_flash_attention(
             return flash_attention_pallas(
                 q, k, v, spec, scale=scale, block_q=block_q, block_kv=block_kv,
                 interpret=interpret, schedule=schedule, bwd=bwd,
+                num_q_bands=num_q_bands, kv_splits=kv_splits,
             )
         from repro.core.flash import flash_attention
 
@@ -473,5 +479,6 @@ def ring_flash_attention(
         spec=spec, layout=layout, mesh=mesh, axis=axis, batch_axes=batch_axes,
         impl=impl, block_q=block_q, block_kv=block_kv, scale=scale,
         interpret=interpret, schedule=schedule, bwd=bwd,
+        num_q_bands=num_q_bands, kv_splits=kv_splits,
     )
     return _ring(q, k, v, meta)

@@ -90,10 +90,26 @@ def flash_decode_kernel(
     interpret = resolve_interpret(interpret)
     BHk, G, D = q.shape
     _, S, _ = k.shape
-    ns = num_splits
-    while S % ns != 0:
-        ns -= 1
-    chunk = S // ns
+    # Ceil-div split resolution. The historical `while S % ns: ns -= 1`
+    # silently degraded to ns=1 for prime/odd cache lengths -- the C2
+    # parallelism gone exactly when the cache is ragged. Instead: 8-aligned
+    # (sublane) ceil-div chunks, the cache padded up to ns*chunk, and the
+    # tail masked by the existing `cols < L` guard (pad cols sit at logical
+    # positions >= S >= L), so the partial merge stays exact.
+    ns = max(1, min(num_splits, -(-S // 8)))
+    chunk = -(-(-(-S // ns)) // 8) * 8  # ceil(ceil(S/ns) / 8) * 8
+    ns = -(-S // chunk)
+    pad = ns * chunk - S
+    if pad:
+        # jnp.pad copies the whole cache; serving allocates chunk-aligned
+        # caches (prompt_pad buckets) so this triggers only for genuinely
+        # ragged capacities -- allocate aligned if decode is hot there.
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        if kv_seg is not None:
+            # any id never equal to a real q segment: pad cols are masked by
+            # cols < L already; -1 keeps them inert even if L were wrong
+            kv_seg = jnp.pad(kv_seg, ((0, 0), (0, pad)), constant_values=-1)
     has_segments = kv_seg is not None
     kernel = functools.partial(
         _decode_kernel, chunk=chunk, window=window, sink=sink,

@@ -15,6 +15,15 @@ TPU mapping of the paper's scheme (DESIGN.md Section 2):
     the (static) grid; cross-segment tiles still occupy a step but skip
     their *compute* via a prefetched per-(batch, step) bit table -- no
     in-kernel segment-id min/max probing.
+  * Occupancy-aware forward partitioning (paper Section 3.2, Figure 2):
+    the compact schedule optionally splits each head's work over a second
+    *parallel* grid axis -- ``num_q_bands`` q-row bands (balanced by
+    visible tile count; bitwise-equal to unbanded) and/or ``kv_splits``
+    contiguous KV ranges emitting (o, lse) partials merged outside the
+    kernel. Grid ``(BH, bands * splits, n_steps_part)``, so small-BH /
+    long-S shapes still fill the chip. See
+    ``schedule.build_partitioned_schedule`` and ``ops.
+    default_forward_partitions`` (the shape-aware auto policy).
   * ``schedule="dense"``: the legacy ``(BH, Tq, Tkv)`` grid that visits
     every tile and skips empty ones with ``pl.when`` (kept as the
     measurable baseline; the matmuls are skipped but the grid step and its
@@ -50,6 +59,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.masks import DEFAULT_MASK_VALUE, MaskSpec
 from repro.kernels.compat import CompilerParams, resolve_interpret
 from repro.kernels.schedule import (
+    build_partitioned_schedule,
     build_tile_schedule,
     decode_step_bits,
     segment_step_tables,
@@ -277,6 +287,59 @@ def _fwd_kernel_compact(
         _finalize_state(o_ref, lse_ref, m_scr, l_scr, acc_scr)
 
 
+def _fwd_kernel_partitioned(
+    *refs,  # scalar-prefetch refs, inputs [+ seg tiles], outputs, scratch
+    spec: MaskSpec,
+    bq: int,
+    bk: int,
+    kv_valid: int,
+    heads: int,
+    has_segments: bool = False,
+):
+    """Compact step body on the partitioned grid (BH, P, n_steps_part).
+
+    Identical tile math to ``_fwd_kernel_compact``; the partition id ``p``
+    (a *parallel* axis -- the paper's Figure 2 forward split) picks the row
+    of the 2-D schedule tables. Each partition runs its own q-row runs with
+    its own scratch; there is no cross-partition communication. Padding
+    placeholder steps (flags == 0) run no compute and revisit the last
+    emitted blocks, so they cost neither exps nor DMAs.
+    """
+    if has_segments:
+        (outer_ref, inner_ref, flags_ref, pkv_ref, seg_ref,
+         q_ref, k_ref, v_ref, qs_ref, ks_ref,
+         o_ref, lse_ref, m_scr, l_scr, acc_scr) = refs
+        q_seg, kv_seg = qs_ref[0], ks_ref[0]
+    else:
+        (outer_ref, inner_ref, flags_ref, pkv_ref,
+         q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr) = refs
+        q_seg = kv_seg = None
+    del pkv_ref  # output index maps read it; the body does not
+    bh = pl.program_id(0)
+    p = pl.program_id(1)
+    s = pl.program_id(2)
+    i = outer_ref[p, s]
+    j = inner_ref[p, s]
+    active, first, last, needs_mask = decode_step_bits(
+        flags_ref[p, s], seg_ref[bh // heads, p, s] if has_segments else None
+    )
+
+    @pl.when(first)
+    def _init():
+        _init_state(m_scr, l_scr, acc_scr)
+
+    @pl.when(active)
+    def _compute():
+        mask = _tile_mask(spec, i, j, bq, bk, kv_valid, q_seg, kv_seg)
+        _online_softmax_step(
+            q_ref[0], k_ref[0], v_ref[0], mask, needs_mask, m_scr, l_scr, acc_scr
+        )
+
+    @pl.when(last)
+    def _finalize():
+        _finalize_state(o_ref, lse_ref, m_scr, l_scr, acc_scr)
+
+
 def _fwd_cost(BH, n_vis, block_q, block_kv, D, q, k):
     """Roofline-honest cost: count only visible tiles (block skipping)."""
     flops_per_tile = 2 * block_q * block_kv * D * 2  # QK^T + PV
@@ -302,13 +365,34 @@ def flash_fwd(
     kv_seg: Optional[jnp.ndarray] = None,  # (B, Skp) int32
     interpret: Optional[bool] = None,
     schedule: str = "compact",
+    num_q_bands: int = 1,
+    kv_splits: int = 1,
 ):
+    """FA2 forward on prepped (head-major, padded) tensors.
+
+    ``num_q_bands`` / ``kv_splits`` (compact schedule only) apply the
+    paper's Section 3.2 forward partitioning: the grid grows a *parallel*
+    partition axis over q-row bands x contiguous kv ranges (see
+    ``schedule.build_partitioned_schedule``). With ``kv_splits == 1`` the
+    return contract is unchanged -- ``(o (BH, Sq, D), lse (BH, Sq))``,
+    bitwise-equal to the unbanded schedule. With ``kv_splits > 1`` the
+    kernel returns *partials* ``(o_parts (BH, kv_splits, Sq, D) f32,
+    lse_parts (BH, kv_splits, Sq) f32)`` for the caller to fold with
+    ``online_softmax.merge_partials`` (ops.py does).
+    """
     interpret = resolve_interpret(interpret)
     BH, Sq, D = q.shape
     BHk, Skp, _ = k.shape
     assert Sq % block_q == 0 and Skp % block_kv == 0
     t_q, t_kv = Sq // block_q, Skp // block_kv
     has_segments = q_seg is not None
+    num_q_bands = max(1, min(num_q_bands, t_q))
+    kv_splits = max(1, min(kv_splits, t_kv))
+    if schedule == "dense" and (num_q_bands > 1 or kv_splits > 1):
+        raise ValueError(
+            "num_q_bands/kv_splits partition the compact schedule; the dense "
+            "grid already keeps its q-tile axis parallel"
+        )
 
     # (Segment skipping is data-dependent, so the static spec-only count is
     # an upper bound there.)
@@ -364,8 +448,15 @@ def flash_fwd(
 
     if schedule != "compact":
         raise ValueError(f"unknown tile schedule: {schedule!r}")
-    sched = build_tile_schedule(spec, t_q, t_kv, block_q, block_kv, kv_valid)
     heads = BH // q_seg.shape[0] if has_segments else 1
+    if num_q_bands > 1 or kv_splits > 1:
+        return _flash_fwd_partitioned(
+            q, k, v, spec, group=group, block_q=block_q, block_kv=block_kv,
+            kv_valid=kv_valid, q_seg=q_seg, kv_seg=kv_seg, heads=heads,
+            interpret=interpret, num_q_bands=num_q_bands, kv_splits=kv_splits,
+            cost=cost, t_q=t_q, t_kv=t_kv,
+        )
+    sched = build_tile_schedule(spec, t_q, t_kv, block_q, block_kv, kv_valid)
     kernel = functools.partial(
         _fwd_kernel_compact, spec=spec, bq=block_q, bk=block_kv,
         kv_valid=kv_valid, heads=heads, has_segments=has_segments,
@@ -414,3 +505,121 @@ def flash_fwd(
         interpret=interpret,
         name="fa2_fwd_compact_varlen" if has_segments else "fa2_fwd_compact",
     )(*scalar_args, *inputs)
+
+
+def _flash_fwd_partitioned(
+    q, k, v, spec: MaskSpec, *, group, block_q, block_kv, kv_valid,
+    q_seg, kv_seg, heads, interpret, num_q_bands, kv_splits, cost, t_q, t_kv,
+):
+    """Compact forward on the partitioned grid ``(BH, P, n_steps_part)``.
+
+    The partition axis is ``parallel`` (dimension semantics); with
+    ``kv_splits > 1`` the outputs are per-split partials (see flash_fwd's
+    docstring for the return contract).
+    """
+    BH, Sq, D = q.shape
+    has_segments = q_seg is not None
+    sched = build_partitioned_schedule(
+        spec, t_q, t_kv, block_q, block_kv, kv_valid, num_q_bands, kv_splits
+    )
+    P, ks = sched.num_parts, sched.kv_splits
+    kernel = functools.partial(
+        _fwd_kernel_partitioned, spec=spec, bq=block_q, bk=block_kv,
+        kv_valid=kv_valid, heads=heads, has_segments=has_segments,
+    )
+    # index maps receive the scalar-prefetch refs after the 3 grid ids
+    in_specs = [
+        pl.BlockSpec(
+            (1, block_q, D), lambda bh, p, s, o_, i_, f_, k_, *_: (bh, o_[p, s], 0)
+        ),
+        pl.BlockSpec(
+            (1, block_kv, D),
+            lambda bh, p, s, o_, i_, f_, k_, *_, g=group: (bh // g, i_[p, s], 0),
+        ),
+        pl.BlockSpec(
+            (1, block_kv, D),
+            lambda bh, p, s, o_, i_, f_, k_, *_, g=group: (bh // g, i_[p, s], 0),
+        ),
+    ]
+    scalar_args = [
+        jnp.asarray(sched.outer), jnp.asarray(sched.inner),
+        jnp.asarray(sched.flags), jnp.asarray(sched.part_kv),
+    ]
+    inputs = [q, k, v]
+    if has_segments:
+        scalar_args.append(
+            segment_step_tables(q_seg, kv_seg, sched, block_q, block_kv)
+        )
+        in_specs += [
+            pl.BlockSpec(
+                (1, block_q),
+                lambda bh, p, s, o_, i_, f_, k_, t_, h=heads: (bh // h, o_[p, s]),
+            ),
+            pl.BlockSpec(
+                (1, block_kv),
+                lambda bh, p, s, o_, i_, f_, k_, t_, h=heads: (bh // h, i_[p, s]),
+            ),
+        ]
+        inputs += [q_seg, kv_seg]
+    if ks == 1:
+        # bands only: same outputs as the unbanded schedule, bitwise-equal
+        # (each q row runs its unchanged kv visit sequence, just on a
+        # different parallel grid cell).
+        out_shape = [
+            jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+            jax.ShapeDtypeStruct((BH, Sq), jnp.float32),
+        ]
+        out_specs = [
+            pl.BlockSpec(
+                (1, block_q, D), lambda bh, p, s, o_, i_, f_, k_, *_: (bh, o_[p, s], 0)
+            ),
+            pl.BlockSpec(
+                (1, block_q), lambda bh, p, s, o_, i_, f_, k_, *_: (bh, o_[p, s])
+            ),
+        ]
+    else:
+        # split-KV partials: each split emits a locally-normalized (o, lse)
+        # plane, folded by merge_partials in ops.py. f32 so the fold does
+        # not round through the storage dtype. Split planes are flattened
+        # into the leading axis (row bh*ks + split) to keep the kernel's
+        # output refs rank-identical to the unsplit path.
+        out_shape = [
+            jax.ShapeDtypeStruct((BH * ks, Sq, D), jnp.float32),
+            jax.ShapeDtypeStruct((BH * ks, Sq), jnp.float32),
+        ]
+        out_specs = [
+            pl.BlockSpec(
+                (1, block_q, D),
+                lambda bh, p, s, o_, i_, f_, k_, *_, n=ks: (bh * n + k_[p], o_[p, s], 0),
+            ),
+            pl.BlockSpec(
+                (1, block_q),
+                lambda bh, p, s, o_, i_, f_, k_, *_, n=ks: (bh * n + k_[p], o_[p, s]),
+            ),
+        ]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(scalar_args),
+        grid=(BH, P, sched.n_steps),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+    )
+    name = "fa2_fwd_splitkv" if ks > 1 else "fa2_fwd_banded"
+    o, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        cost_estimate=cost,
+        interpret=interpret,
+        name=name + "_varlen" if has_segments else name,
+    )(*scalar_args, *inputs)
+    if ks == 1:
+        return o, lse
+    return o.reshape(BH, ks, Sq, D), lse.reshape(BH, ks, Sq)

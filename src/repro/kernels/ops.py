@@ -48,15 +48,23 @@ from repro.core.online_softmax import combine_lse_outputs
 from repro.kernels import flash_bwd as _bwd
 from repro.kernels import flash_decode as _dec
 from repro.kernels import flash_fwd as _fwd
-from repro.kernels.schedule import TileSchedule, build_tile_schedule  # re-export
+from repro.kernels.schedule import (  # re-export
+    PartitionedSchedule,
+    TileSchedule,
+    build_partitioned_schedule,
+    build_tile_schedule,
+)
 
 LANES = _fwd.LANES
 
 __all__ = [
     "PallasFlashConfig",
+    "PartitionedSchedule",
     "TileSchedule",
+    "build_partitioned_schedule",
     "build_tile_schedule",
     "default_block_sizes",
+    "default_forward_partitions",
     "flash_attention_pallas",
     "flash_attention_pallas_shard_bwd",
     "flash_attention_pallas_varlen",
@@ -75,12 +83,22 @@ class PallasFlashConfig:
     interpret: Optional[bool] = None  # None -> auto (off on TPU); compat.py
     schedule: str = "compact"  # 'compact' | 'dense' tile schedule
     bwd: str = "fused"  # 'fused' (one-pass) | 'split' (delta + dkv + dq)
+    # Forward partitioning (compact schedule; paper Section 3.2). None ->
+    # the shape-aware default_forward_partitions policy; explicit ints
+    # override (1 disables). Bands are bitwise-free; kv splits change the
+    # fp summation order (exact up to merge rounding).
+    num_q_bands: Optional[int] = None
+    kv_splits: Optional[int] = None
 
     def __post_init__(self):
         if self.schedule not in ("compact", "dense"):
             raise ValueError(f"unknown tile schedule: {self.schedule!r}")
         if self.bwd not in ("fused", "split"):
             raise ValueError(f"unknown backward mode: {self.bwd!r}")
+        for name in ("num_q_bands", "kv_splits"):
+            val = getattr(self, name)
+            if val is not None and val < 1:
+                raise ValueError(f"{name} must be >= 1 (or None for auto)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +113,8 @@ class _KernelMeta:
     schedule: str
     bwd: str
     interpret: Optional[bool]
+    num_q_bands: int = 1  # resolved (never None) forward partition counts
+    kv_splits: int = 1
 
 
 def _round_up(x: int, m: int) -> int:
@@ -115,6 +135,52 @@ def _resolve_bwd(bwd: str, group: int, seq_q_padded: int) -> str:
     if bwd == "fused" and group * seq_q_padded * 4 > _FUSED_DELTA_VMEM_BUDGET:
         return "split"
     return bwd
+
+
+# Target number of *parallel* grid cells for the compact forward. The
+# flattened compact schedule exposes only B*Hq parallel cells; below this
+# target the auto policy adds q bands (paper Section 3.2 forward
+# partitioning) until BH * bands reaches it (or runs out of q tiles). A
+# modest multiple of real TPU core counts so the scheduler can also
+# pipeline across cells; large-BH shapes stay at 1 band (no padding cost).
+_TARGET_PARALLEL_CELLS = 64
+
+
+def default_forward_partitions(bh: int, t_q: int, t_kv: int):
+    """Shape-aware (num_q_bands, kv_splits) for the compact forward.
+
+    Bands: enough that ``bh * bands >= _TARGET_PARALLEL_CELLS``, capped at
+    the q-tile count; degrade to 1 when ``bh`` alone fills the target
+    (large-batch training) or the sequence is a single q tile. Banding is
+    bitwise-free, so it is safe to apply by default.
+
+    KV splits: only for the prefill-like corner where q-parallelism cannot
+    exist at all -- a single q tile against many kv tiles (short-q/long-kv
+    cross-attention, chunked prefill) with bh under the target. Splits
+    change the fp merge order (exact up to rounding), so wider shapes that
+    merely *also* want splits opt in explicitly via ``kv_splits=``.
+    """
+    bands = 1
+    if bh < _TARGET_PARALLEL_CELLS and t_q > 1:
+        bands = min(t_q, -(-_TARGET_PARALLEL_CELLS // bh))
+    splits = 1
+    if t_q == 1 and t_kv >= 4 and bh < _TARGET_PARALLEL_CELLS:
+        splits = min(t_kv, -(-_TARGET_PARALLEL_CELLS // bh))
+    return bands, splits
+
+
+def _resolve_partitions(cfg: PallasFlashConfig, bh: int, t_q: int, t_kv: int):
+    """cfg knobs (None = auto) -> concrete (num_q_bands, kv_splits)."""
+    if cfg.schedule != "compact":
+        if (cfg.num_q_bands or 1) > 1 or (cfg.kv_splits or 1) > 1:
+            raise ValueError(
+                "num_q_bands/kv_splits require schedule='compact'"
+            )
+        return 1, 1
+    auto_nb, auto_ks = default_forward_partitions(bh, t_q, t_kv)
+    nb = cfg.num_q_bands if cfg.num_q_bands is not None else auto_nb
+    ks = cfg.kv_splits if cfg.kv_splits is not None else auto_ks
+    return max(1, min(nb, t_q)), max(1, min(ks, t_kv))
 
 
 def default_block_sizes(seq_q: int, seq_kv: int, head_dim: int):
@@ -186,10 +252,15 @@ def _prep_call(q, k, v, cfg: PallasFlashConfig, q_seg=None, kv_seg=None):
     o = 0, lse = -inf; trimmed by the caller).
     """
     qh, kh, vh, m = _prep(q, k, v, cfg)
+    # nsplit, NOT ks: `ks` is the kv segment-ids tensor throughout this file
+    nb, nsplit = _resolve_partitions(
+        cfg, m["B"] * m["Hq"], m["Sqp"] // m["bq"], m["Skp"] // m["bk"]
+    )
     meta = _KernelMeta(
         spec=cfg.spec, block_q=m["bq"], block_kv=m["bk"], group=m["G"],
         kv_valid=m["Sk"], schedule=cfg.schedule,
         bwd=_resolve_bwd(cfg.bwd, m["G"], m["Sqp"]), interpret=cfg.interpret,
+        num_q_bands=nb, kv_splits=nsplit,
     )
     qs = ks = None
     if q_seg is not None:
@@ -205,12 +276,28 @@ def _prep_call(q, k, v, cfg: PallasFlashConfig, q_seg=None, kv_seg=None):
 
 
 def _core_fwd(qh, kh, vh, qs, ks, meta: _KernelMeta):
-    """flash_fwd on prepped tensors -> (o (BH, Sqp, D), lse (BH, Sqp))."""
-    return _fwd.flash_fwd(
+    """flash_fwd on prepped tensors -> (o (BH, Sqp, D), lse (BH, Sqp)).
+
+    With ``meta.kv_splits > 1`` the kernel emits per-split partials which
+    are folded here by the associative ``merge_partials`` tree
+    (``combine_lse_outputs``) -- the same primitive split-KV decode and the
+    ring merge use. A split that saw no visible tile for a row emitted the
+    merge identity (o = 0, lse = -inf), so fully-masked rows still come out
+    as (0, -inf) exactly like the single-pass kernel.
+    """
+    out = _fwd.flash_fwd(
         qh, kh, vh, meta.spec, group=meta.group, block_q=meta.block_q,
         block_kv=meta.block_kv, kv_valid=meta.kv_valid, q_seg=qs, kv_seg=ks,
         interpret=meta.interpret, schedule=meta.schedule,
+        num_q_bands=meta.num_q_bands, kv_splits=meta.kv_splits,
     )
+    if meta.kv_splits > 1:
+        o_parts, lse_parts = out  # (BH, ks, Sqp, D) f32, (BH, ks, Sqp) f32
+        o, lse = combine_lse_outputs(
+            jnp.moveaxis(o_parts, 1, 0), jnp.moveaxis(lse_parts, 1, 0)
+        )
+        return o.astype(qh.dtype), lse
+    return out
 
 
 def _core_bwd(qh, kh, vh, o, lse, do, meta: _KernelMeta, qs=None, ks=None):
@@ -294,16 +381,20 @@ def flash_attention_pallas(
     block_q: Optional[int] = None, block_kv: Optional[int] = None,
     interpret: Optional[bool] = None, schedule: str = "compact",
     bwd: str = "fused",
+    num_q_bands: Optional[int] = None, kv_splits: Optional[int] = None,
 ):
     """Differentiable FA2 via the Pallas TPU kernels. q (B,Sq,Hq,D).
 
     ``bwd`` picks the backward: ``"fused"`` (one-pass kernel, default) or
     ``"split"`` (delta + dkv + dq baseline). Block sizes default to the
-    shape-aware :func:`default_block_sizes` table.
+    shape-aware :func:`default_block_sizes` table; ``num_q_bands`` /
+    ``kv_splits`` (compact schedule) default to the shape-aware
+    :func:`default_forward_partitions` occupancy policy.
     """
     cfg = PallasFlashConfig(
         spec=spec, block_q=block_q, block_kv=block_kv, scale=scale,
         interpret=interpret, schedule=schedule, bwd=bwd,
+        num_q_bands=num_q_bands, kv_splits=kv_splits,
     )
     qh, kh, vh, _, _, m, meta = _prep_call(q, k, v, cfg)
     o = _flash_core(qh, kh, vh, meta)
@@ -316,6 +407,7 @@ def flash_attention_pallas_varlen(
     block_q: Optional[int] = None, block_kv: Optional[int] = None,
     interpret: Optional[bool] = None, schedule: str = "compact",
     bwd: str = "fused",
+    num_q_bands: Optional[int] = None, kv_splits: Optional[int] = None,
 ):
     """Differentiable segment-packed (varlen) FA2 via the Pallas kernels.
 
@@ -345,6 +437,7 @@ def flash_attention_pallas_varlen(
     cfg = PallasFlashConfig(
         spec=spec, block_q=block_q, block_kv=block_kv, scale=scale,
         interpret=interpret, schedule=schedule, bwd=bwd,
+        num_q_bands=num_q_bands, kv_splits=kv_splits,
     )
     qh, kh, vh, qs, ks, m, meta = _prep_call(q, k, v, cfg, segment_ids, kv_segment_ids)
     o = _flash_core_varlen(qh, kh, vh, qs, ks, meta)
@@ -364,6 +457,7 @@ def flash_attention_pallas_varlen_with_lse(
     kv_segment_ids=None, scale: Optional[float] = None,
     block_q: Optional[int] = None, block_kv: Optional[int] = None,
     interpret: Optional[bool] = None, schedule: str = "compact",
+    num_q_bands: Optional[int] = None, kv_splits: Optional[int] = None,
 ):
     """Forward-only varlen (serving): returns (o, lse (B, Hq, Sq))."""
     if kv_segment_ids is None:
@@ -371,6 +465,7 @@ def flash_attention_pallas_varlen_with_lse(
     cfg = PallasFlashConfig(
         spec=spec, block_q=block_q, block_kv=block_kv, scale=scale,
         interpret=interpret, schedule=schedule,
+        num_q_bands=num_q_bands, kv_splits=kv_splits,
     )
     return _fwd_with_lse(
         q, k, v, cfg, segment_ids.astype(jnp.int32), kv_segment_ids.astype(jnp.int32)
@@ -382,10 +477,12 @@ def flash_attention_pallas_with_lse(
     scale: Optional[float] = None,
     block_q: Optional[int] = None, block_kv: Optional[int] = None,
     interpret: Optional[bool] = None, schedule: str = "compact",
+    num_q_bands: Optional[int] = None, kv_splits: Optional[int] = None,
 ):
     cfg = PallasFlashConfig(
         spec=spec, block_q=block_q, block_kv=block_kv, scale=scale,
         interpret=interpret, schedule=schedule,
+        num_q_bands=num_q_bands, kv_splits=kv_splits,
     )
     return _fwd_with_lse(q, k, v, cfg)
 

@@ -54,6 +54,40 @@ def test_decode_window_and_sink(data, impl):
         np.testing.assert_allclose(o[b : b + 1], o_ref, atol=5e-6, rtol=1e-5)
 
 
+def test_prime_cache_length_keeps_splits():
+    """ISSUE 5 satellite: a prime-length KV cache must NOT silently degrade
+    to one split (the old `while S % ns: ns -= 1` resolution did). Ceil-div
+    chunks + the masked tail keep the partial merge exact."""
+    import math
+
+    from repro.kernels import flash_decode as FD
+    from repro.kernels.ops import _heads_layout
+
+    Bp, Sp = 2, 97  # prime cache length
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    kc = jax.random.normal(ks[0], (Bp, Sp, Hk, D))
+    vc = jax.random.normal(ks[1], (Bp, Sp, Hk, D))
+    q = jax.random.normal(ks[2], (Bp, 1, Hq, D))
+    lens = jnp.array([97, 61], jnp.int32)
+
+    # kernel layer: the split axis survives the prime length
+    qh = (q.astype(jnp.float32) / math.sqrt(D)).astype(q.dtype)
+    qh = qh.reshape(Bp, Hk, Hq // Hk, D).reshape(Bp * Hk, Hq // Hk, D)
+    o_parts, _ = FD.flash_decode_kernel(
+        qh, _heads_layout(kc), _heads_layout(vc), jnp.repeat(lens, Hk),
+        num_splits=8,
+    )
+    assert o_parts.shape[1] > 1, "prime cache length degraded to 1 split"
+
+    o, _ = flash_decode_pallas(q, kc, vc, lens, num_splits=8)
+    for b in range(Bp):
+        L = int(lens[b])
+        o_ref, _ = attention_reference(
+            q[b : b + 1], kc[b : b + 1, :L], vc[b : b + 1, :L], MaskSpec()
+        )
+        np.testing.assert_allclose(o[b : b + 1], o_ref, atol=5e-6, rtol=1e-5)
+
+
 def test_split_invariance(data):
     """The split-KV merge is exact for ANY split count (associativity)."""
     q, kc, vc, lens = data
