@@ -1,0 +1,139 @@
+"""Tuned-vs-heuristic knob comparison (the ISSUE 6 autotuner payoff rows).
+
+For each committed ``tuned.json`` attention entry on a fast benchmark
+shape, resolve the five kernel knobs twice -- once consulting the tuned
+cache (``use_tuned=True``, i.e. what a ``PallasFlashConfig`` with all
+knobs ``None`` now does) and once heuristics-only (``use_tuned=False``,
+the pre-autotuner behavior) -- and time both with the shared interleaved
+min-of-N helper:
+
+    tuned_vs_heuristic_fwd/{tuned|heuristic}/causal=C/seq=S/heads=H/hd=D
+    tuned_vs_heuristic_fwdbwd/{tuned|heuristic}/...   (one cheap shape)
+
+ASSERTED: tuned must not lose to the heuristic beyond a small noise
+tolerance on any swept shape -- the sweep's candidate set always contains
+the heuristic's own pick, so losing means the cache is stale (re-run
+``python -m repro.kernels.autotune``). When both resolutions pick
+identical knobs the pair is timed once and reported twice (identical
+configs cannot differ except by noise; report says so).
+
+Shapes with seq > MAX_SEQ are skipped (interpret mode pays Python per
+grid step); the skip is logged as a row so the cap is never silent.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.timing import interleaved_timeit
+from repro.core.masks import MaskSpec
+from repro.kernels import autotune
+from repro.kernels.ops import (
+    PallasFlashConfig,
+    flash_attention_pallas,
+    resolve_pallas_knobs,
+)
+
+TOKENS = 4096  # fig4_6 protocol fallback: batch * seq held constant
+MAX_SEQ = 512
+FWDBWD_SHAPES = {(256, True)}  # (seq, causal) pairs that also time fwd+bwd
+NOISE_TOL = 1.10
+
+KNOB_NAMES = ("block_q", "block_kv", "schedule", "bwd", "num_q_bands",
+              "kv_splits")
+
+
+def _fmt(knobs: dict) -> str:
+    return ";".join(f"{k}={knobs[k]}" for k in KNOB_NAMES)
+
+
+def _rows_for(csv: List[str], meta: dict, entry: dict) -> None:
+    seq, heads, hd = meta["seq"], meta["heads"], meta["head_dim"]
+    causal = meta["causal"]
+    # Time at the batch the entry was SWEPT at (provenance field): the
+    # cache key deliberately omits batch, so comparing at a different one
+    # would judge the tuned knobs on a shape they were never measured for.
+    # For the BENCH shapes this equals the fig4_6 TOKENS protocol anyway.
+    batch = entry.get("batch") or max(1, TOKENS // seq)
+    tag = f"causal={int(causal)}/seq={seq}/heads={heads}/hd={hd}/batch={batch}"
+    spec = MaskSpec(causal=causal)
+    shape = (batch, seq, heads, hd)
+    resolved = {
+        mode: resolve_pallas_knobs(
+            PallasFlashConfig(spec=spec, use_tuned=(mode == "tuned")),
+            shape, shape,
+        )
+        for mode in ("tuned", "heuristic")
+    }
+    knobs = {mode: {k: r[k] for k in KNOB_NAMES}
+             for mode, r in resolved.items()}
+    ks = jax.random.split(jax.random.PRNGKey(42), 3)
+    q, k, v = (jax.random.normal(k_, shape, jnp.float32) for k_ in ks)
+
+    def _fwd(mode):
+        kn = dict(knobs[mode])
+        kn.pop("bwd")
+        return jax.jit(lambda q, k, v: flash_attention_pallas(
+            q, k, v, spec, use_tuned=False, **kn
+        ))
+
+    def _fwdbwd(mode):
+        return jax.jit(jax.grad(lambda q, k, v: flash_attention_pallas(
+            q, k, v, spec, use_tuned=False, **knobs[mode]
+        ).sum()))
+
+    passes = [("tuned_vs_heuristic_fwd", _fwd)]
+    if (seq, causal) in FWDBWD_SHAPES:
+        passes.append(("tuned_vs_heuristic_fwdbwd", _fwdbwd))
+    for bench, make in passes:
+        # identical per-PASS knobs (fwd ignores `bwd`) -> same jitted fn:
+        # time it once, report twice (noise cannot separate identical fns)
+        relevant = (lambda kn: {k: v for k, v in kn.items() if k != "bwd"}
+                    ) if bench.endswith("_fwd") else (lambda kn: kn)
+        if relevant(knobs["tuned"]) == relevant(knobs["heuristic"]):
+            t = interleaved_timeit({"both": make("tuned")}, q, k, v,
+                                   iters=3)["both"]
+            best = {"tuned": t, "heuristic": t}
+            note = "identical-knobs;"
+        else:
+            best = interleaved_timeit(
+                {mode: make(mode) for mode in ("tuned", "heuristic")},
+                q, k, v, iters=3,
+            )
+            note = ""
+        for mode in ("tuned", "heuristic"):
+            csv.append(
+                f"{bench}/{mode}/{tag},{best[mode]*1e6:.0f},"
+                f"{note}{_fmt(knobs[mode])}"
+            )
+        assert best["tuned"] <= best["heuristic"] * NOISE_TOL, (
+            "tuned knobs lost to the heuristic -- stale tuned.json? "
+            "re-run `python -m repro.kernels.autotune`",
+            bench, tag, best, knobs,
+        )
+
+
+def run(csv: List[str]) -> None:
+    entries = autotune.load_cache()["entries"]
+    seen = set()
+    for key in sorted(entries):
+        meta = autotune.parse_key(key)
+        if meta["impl"] != "flash_pallas" or meta["dtype"] != "float32":
+            continue
+        sig = (meta["causal"], meta["seq"], meta["heads"], meta["head_dim"])
+        if sig in seen:
+            continue
+        seen.add(sig)
+        if meta["seq"] > MAX_SEQ:
+            csv.append(
+                f"tuned_vs_heuristic_skipped/causal={int(meta['causal'])}"
+                f"/seq={meta['seq']}/heads={meta['heads']}/hd={meta['head_dim']}"
+                f",,seq>{MAX_SEQ}: interpret-mode cost cap (not swept here)"
+            )
+            continue
+        _rows_for(csv, meta, entries[key])
+    if not seen:
+        csv.append("tuned_vs_heuristic_skipped/none,,empty tuned cache")

@@ -12,12 +12,12 @@ Derived column: TFLOPs/s using the paper's formula
 
 from __future__ import annotations
 
-import time
 from typing import Callable, List
 
 import jax
 import jax.numpy as jnp
 
+from benchmarks.timing import interleaved_timeit, time_min
 from repro.core.attention import AttentionConfig, attention
 from repro.core.masks import MaskSpec
 
@@ -26,13 +26,15 @@ HEADS, HEAD_DIM = 4, 64
 SEQS = (256, 512, 1024, 2048)
 
 
-def _time(fn: Callable, *args, iters: int = 3) -> float:
-    # warmup (compile) once; jax.block_until_ready handles pytrees/tuples.
-    jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters
+def _time(fn: Callable, *args, iters: int = 5) -> float:
+    """Min-of-N wall time (shared helper; see benchmarks/timing.py).
+
+    The previous single-warmup mean-of-3 was noise-dominated on a shared
+    host and recorded ``ref`` forward-only at seq=512 as *slower* than
+    forward+backward in BENCH_attn.json — a physical impossibility that
+    forced a re-baseline of the whole trajectory once fixed.
+    """
+    return time_min(fn, *args, iters=iters)
 
 
 def _flops(seq: int, batch: int, causal: bool, bwd: bool) -> float:
@@ -61,17 +63,19 @@ def _time_pair(
     """Time fwd and fwd+bwd for one config; append one CSV row each.
 
     names = (fwd_row_name, fwdbwd_row_name) -- everything left of the first
-    comma in the emitted rows.
+    comma in the emitted rows. The two are timed INTERLEAVED min-of-N
+    (shared helper): they will be compared, so drift must hit both equally
+    -- fwd > fwd+bwd in the output is a timing bug, not a measurement.
     """
     fwd = jax.jit(lambda q, k, v, cfg=cfg: attention(q, k, v, spec, cfg))
-    t_f = _time(fwd, q, k, v)
-    csv.append(
-        f"{names[0]},{t_f*1e6:.0f},{_flops(seq, batch, causal, False)/t_f/1e12:.4f} TFLOP/s"
-    )
     loss = jax.jit(
         jax.grad(lambda q, k, v, cfg=cfg: attention(q, k, v, spec, cfg).sum())
     )
-    t_b = _time(loss, q, k, v)
+    best = interleaved_timeit({"fwd": fwd, "fwdbwd": loss}, q, k, v)
+    t_f, t_b = best["fwd"], best["fwdbwd"]
+    csv.append(
+        f"{names[0]},{t_f*1e6:.0f},{_flops(seq, batch, causal, False)/t_f/1e12:.4f} TFLOP/s"
+    )
     csv.append(
         f"{names[1]},{t_b*1e6:.0f},{_flops(seq, batch, causal, True)/t_b/1e12:.4f} TFLOP/s"
     )
@@ -137,10 +141,10 @@ def bwd_comparison(csv: List[str], key=None) -> None:
     XLA while iteration that copies every carried array, and inside a full
     ``jax.grad`` those copies dominate and wash out the kernel delta on a
     small host. Fused must beat split -- asserted (interleaved min-of-N
-    timing), not just reported. Also the ``bwd_cmp`` module for CI.
+    timing via the shared benchmarks/timing helper -- this function's
+    original inline scheme is where the repo-wide discipline came from),
+    not just reported. Also the ``bwd_cmp`` module for CI.
     """
-    import time as _t
-
     from repro.kernels import flash_bwd as FB
     from repro.kernels import flash_fwd as FF
 
@@ -173,15 +177,8 @@ def bwd_comparison(csv: List[str], key=None) -> None:
         return jax.jit(fn)
 
     fns = {bwd: make(bwd) for bwd in ("split", "fused")}
-    for f in fns.values():  # compile + first-call warmup
-        jax.block_until_ready(f(qh, kh, vh, do))
-    times = {bwd: [] for bwd in fns}
-    for _ in range(5):  # interleaved min-of-N: robust to host contention
-        for bwd, f in fns.items():
-            t0 = _t.perf_counter()
-            jax.block_until_ready(f(qh, kh, vh, do))
-            times[bwd].append(_t.perf_counter() - t0)
-    best = {bwd: min(ts) for bwd, ts in times.items()}
+    # interleaved min-of-N (shared helper): robust to host contention
+    best = interleaved_timeit(fns, qh, kh, vh, do, iters=5)
     for bwd in ("split", "fused"):
         tag = f"flash_pallas/bwd={bwd}/causal=1/seq={seq}"
         csv.append(

@@ -17,11 +17,12 @@ runs exactly two.
 
 from __future__ import annotations
 
-import time
 from typing import List
 
 import jax
 import jax.numpy as jnp
+
+from benchmarks.timing import interleaved_timeit
 
 from repro.core.flash import flash_attention_with_lse
 from repro.core.flash_v1 import flash_v1_attention
@@ -88,16 +89,16 @@ def run(csv: List[str]) -> None:
     o2 = jax.jit(fa2)(q, k, v)
     assert jnp.allclose(o1, o2, atol=1e-5), "FA1/FA2 forward mismatch"
 
-    for name, fn in (("fa1_style", fa1), ("fa2", fa2)):
-        c = _census(fn, q, k, v)
-        jit = jax.jit(fn)
-        jax.block_until_ready(jit(q, k, v))
-        t0 = time.perf_counter()
-        for _ in range(5):
-            jax.block_until_ready(jit(q, k, v))
-        t = (time.perf_counter() - t0) / 5
+    fns = {"fa1_style": fa1, "fa2": fa2}
+    census = {name: _census(fn, q, k, v) for name, fn in fns.items()}
+    # the two variants are compared row-to-row: interleaved min-of-N
+    # (shared benchmarks/timing helper) so drift hits both equally
+    best = interleaved_timeit(
+        {name: jax.jit(fn) for name, fn in fns.items()}, q, k, v, iters=5
+    )
+    for name, c in census.items():
         csv.append(
-            f"c1_census/{name},{t*1e6:.0f},"
+            f"c1_census/{name},{best[name]*1e6:.0f},"
             f"transc={c['transcendentals']:.3e};div={c['divides']:.3e};matmul={c['flops']:.3e}"
         )
 
@@ -143,18 +144,17 @@ def bwd_exp_census(csv: List[str]) -> None:
     t = S2 // BLK
     n_vis = len(_visible_pairs(spec, t, t, BLK, BLK)[0])
     one_exp_per_tile = BH * n_vis * BLK * BLK
-    counts = {}
-    for name, fn in (("fused", fused), ("split", split)):
-        c = _census(fn, qh, kh, vh, o, do, lse)
-        counts[name] = c["transcendentals"]
-        jit = jax.jit(fn)
-        jax.block_until_ready(jit(qh, kh, vh, o, do, lse))
-        t0 = time.perf_counter()
-        for _ in range(5):
-            jax.block_until_ready(jit(qh, kh, vh, o, do, lse))
-        dt = (time.perf_counter() - t0) / 5
+    fns = {"fused": fused, "split": split}
+    census = {name: _census(fn, qh, kh, vh, o, do, lse)
+              for name, fn in fns.items()}
+    counts = {name: c["transcendentals"] for name, c in census.items()}
+    best = interleaved_timeit(
+        {name: jax.jit(fn) for name, fn in fns.items()},
+        qh, kh, vh, o, do, lse, iters=5,
+    )
+    for name, c in census.items():
         csv.append(
-            f"nonmatmul_bwd/{name},{dt*1e6:.0f},"
+            f"nonmatmul_bwd/{name},{best[name]*1e6:.0f},"
             f"exp_elems={c['transcendentals']:.3e};exp_per_tile="
             f"{c['transcendentals'] / one_exp_per_tile:.2f};matmul={c['flops']:.3e}"
         )

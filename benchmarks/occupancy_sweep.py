@@ -29,12 +29,12 @@ the CI benchmark smoke runs this module (fast shapes only).
 
 from __future__ import annotations
 
-import time
 from typing import List
 
 import jax
 import jax.numpy as jnp
 
+from benchmarks.timing import interleaved_timeit
 from repro.core.flash import _visible_pairs
 from repro.core.masks import MaskSpec
 from repro.kernels import flash_fwd as FF
@@ -103,18 +103,13 @@ def grid_utilization(csv: List[str]) -> None:
             assert nb == 1, "auto policy must degrade to 1 band at large BH"
 
 
-def _time(fn, *args, iters: int = 3) -> float:
-    jax.block_until_ready(fn(*args))
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best
-
-
 def fwd_timing(csv: List[str]) -> None:
-    """Kernel-layer wall-clock rows (interpret mode: serial step count)."""
+    """Kernel-layer wall-clock rows (interpret mode: serial step count).
+
+    The three schedule variants of one shape are timed INTERLEAVED
+    min-of-N (shared benchmarks/timing helper): they are compared against
+    each other, so host drift must hit all three equally.
+    """
     spec = MaskSpec(causal=True)
     key = jax.random.PRNGKey(0)
     for B, H, seq in SHAPES:
@@ -130,16 +125,19 @@ def fwd_timing(csv: List[str]) -> None:
             "compact": dict(schedule="compact"),
             "banded": dict(schedule="compact", num_q_bands=nb),
         }
-        for name, extra in variants.items():
-            fn = jax.jit(
+        fns = {
+            name: jax.jit(
                 lambda q, k, v, e=tuple(extra.items()): FF.flash_fwd(
                     q, k, v, spec, **kw, **dict(e)
                 )
             )
-            t_s = _time(fn, qh, kh, vh)
+            for name, extra in variants.items()
+        }
+        best = interleaved_timeit(fns, qh, kh, vh, iters=3)
+        for name in variants:
             csv.append(
-                f"occupancy_fwd/B={B}/H={H}/seq={seq}/{name},{t_s*1e6:.0f},"
-                f"bands={nb if name == 'banded' else 1}"
+                f"occupancy_fwd/B={B}/H={H}/seq={seq}/{name},"
+                f"{best[name]*1e6:.0f},bands={nb if name == 'banded' else 1}"
             )
 
 

@@ -22,7 +22,7 @@
 
 Prints ``name,us_per_call,derived`` CSV.
 
-    python -m benchmarks.run [--json PATH] [names]
+    python -m benchmarks.run [--json PATH] [--prune-stale] [names]
 
 ``--json PATH`` additionally writes the rows as machine-readable records
 ``{"bench", "config", "us_per_call", "derived"}`` (the perf trajectory file
@@ -30,6 +30,17 @@ committed as BENCH_attn.json; CI runs a fast-tier smoke of it). An existing
 file is MERGED, not clobbered: rows whose (bench, config) the current run
 re-measured are replaced, everything else is kept — so the fast CI smoke
 (sched_cmp + ring_accounting) never erases the fig4/fig5 trajectory.
+
+Durability rules (the committed trajectory must survive bad runs):
+
+  * a corrupt/truncated/mis-typed existing file never crashes the merge —
+    it is backed up to ``PATH.bad`` with a warning and the run continues
+    from an empty trajectory (losing the history to a crash in CI was the
+    original failure mode);
+  * kept + fresh rows are deduped by (bench, config), last write wins;
+  * ``--prune-stale`` drops kept rows belonging to a *bench this run
+    re-measured* whose (bench, config) was not emitted again — i.e. rows
+    stranded by a config rename. Benches that did not run are never pruned.
 """
 
 from __future__ import annotations
@@ -40,7 +51,7 @@ import sys
 import time
 
 ALL = ("fig4_6_attn_speed", "nonmatmul_census", "table1_e2e", "roofline",
-       "ring_accounting", "occupancy_sweep")
+       "ring_accounting", "occupancy_sweep", "autotune_sweep")
 
 
 def _records(csv_rows):
@@ -60,13 +71,50 @@ def _records(csv_rows):
     return records
 
 
+def _load_existing(json_path: str):
+    """Tolerantly load the committed trajectory; never crash the merge.
+
+    A corrupt/truncated file (a killed CI run mid-write) or a wrong-typed
+    one is moved aside to ``PATH.bad`` with a warning and treated as empty,
+    so one bad write can't take the merge step — and the whole committed
+    history — down with it. Rows are deduped by (bench, config), keeping
+    the last occurrence (the newest measurement of a key wins).
+    """
+    if not os.path.exists(json_path):
+        return []
+    try:
+        with open(json_path) as f:
+            rows = json.load(f)
+        if not isinstance(rows, list) or not all(
+            isinstance(r, dict) and "bench" in r and "config" in r for r in rows
+        ):
+            raise ValueError("trajectory must be a list of bench/config records")
+    except (json.JSONDecodeError, ValueError, OSError) as e:
+        backup = json_path + ".bad"
+        os.replace(json_path, backup)
+        print(f"# WARNING: existing {json_path} is invalid ({e}); backed it "
+              f"up to {backup} and starting a fresh trajectory", file=sys.stderr)
+        return []
+    deduped = {}
+    for r in rows:
+        deduped[(r["bench"], r["config"])] = r
+    if len(deduped) != len(rows):
+        print(f"# deduped {len(rows) - len(deduped)} duplicate (bench, config) "
+              f"rows in {json_path}", file=sys.stderr)
+    return list(deduped.values())
+
+
 def main() -> None:
     args = sys.argv[1:]
     json_path = None
+    prune_stale = "--prune-stale" in args
+    if prune_stale:
+        args.remove("--prune-stale")
     if "--json" in args:
         i = args.index("--json")
         if i + 1 >= len(args):
-            sys.exit("usage: python -m benchmarks.run [--json PATH] [names]")
+            sys.exit("usage: python -m benchmarks.run [--json PATH] "
+                     "[--prune-stale] [names]")
         json_path = args[i + 1]
         args = args[:i] + args[i + 2:]
     names = args or list(ALL)
@@ -82,11 +130,16 @@ def main() -> None:
     if json_path:
         records = _records(csv[1:])
         fresh = {(r["bench"], r["config"]) for r in records}
-        if os.path.exists(json_path):
-            with open(json_path) as f:
-                kept = [r for r in json.load(f)
-                        if (r.get("bench"), r.get("config")) not in fresh]
-            records = kept + records
+        fresh_benches = {b for b, _ in fresh}
+        kept = [r for r in _load_existing(json_path)
+                if (r["bench"], r["config"]) not in fresh]
+        if prune_stale:
+            stale = [r for r in kept if r["bench"] in fresh_benches]
+            if stale:
+                print(f"# --prune-stale: dropping {len(stale)} stale rows of "
+                      f"re-measured benches", file=sys.stderr)
+            kept = [r for r in kept if r["bench"] not in fresh_benches]
+        records = kept + records
         with open(json_path, "w") as f:
             json.dump(records, f, indent=1)
         print(f"# wrote {json_path} ({len(records)} rows)", file=sys.stderr)

@@ -12,12 +12,12 @@ Derived column: tokens/s and model-FLOPs/s via the Megatron formula
 
 from __future__ import annotations
 
-import time
 from typing import List
 
 import jax
 import jax.numpy as jnp
 
+from benchmarks.timing import interleaved_timeit
 from repro.configs.base import ModelConfig
 from repro.core.attention import AttentionConfig
 from repro.launch.steps import build_train_step
@@ -56,20 +56,22 @@ def run(csv: List[str]) -> None:
             "inputs": jnp.zeros((batch_size, seq), jnp.int32),
             "targets": jnp.ones((batch_size, seq), jnp.int32),
         }
-        for impl in ("ref", "flash_xla"):
+        def _step_fn(impl):
             attn_cfg = AttentionConfig(impl=impl, block_q=256, block_kv=256, mode="auto")
             step = jax.jit(
                 build_train_step(GPT_SMALL, attn_cfg, AdamWConfig(), ce_chunk=512),
                 donate_argnums=(),
             )
-            p, o, m = step(params, opt, batch)
-            jax.block_until_ready(m["loss"])
-            t0 = time.perf_counter()
-            iters = 3
-            for _ in range(iters):
-                _, _, m = step(params, opt, batch)
-                jax.block_until_ready(m["loss"])
-            t = (time.perf_counter() - t0) / iters
+            return lambda params, opt, batch: step(params, opt, batch)[2]["loss"]
+
+        # ref and flash_xla rows are compared (the paper's claim is their
+        # ratio): interleaved min-of-N so host drift hits both equally
+        best = interleaved_timeit(
+            {impl: _step_fn(impl) for impl in ("ref", "flash_xla")},
+            params, opt, batch, iters=3,
+        )
+        for impl in ("ref", "flash_xla"):
+            t = best[impl]
             toks = batch_size * seq
             mflops = (
                 6 * n_params * toks

@@ -26,19 +26,28 @@ from repro.core.masks import MaskSpec
 @dataclasses.dataclass(frozen=True)
 class AttentionConfig:
     impl: str = "flash_xla"  # 'ref' | 'flash_xla' | 'flash_pallas'
-    # None -> shape-aware defaults (kernels/ops.default_block_sizes) on the
-    # Pallas path; the XLA scan path falls back to its fixed 512.
+    # None -> tuned cache (kernels/autotune), then shape-aware defaults
+    # (kernels/ops.default_block_sizes) on the Pallas path; the XLA scan
+    # path falls back to its fixed 512.
     block_q: Optional[int] = None
     block_kv: Optional[int] = None
     mode: str = "auto"  # tile schedule for flash_xla: 'dense' | 'packed' | 'auto'
-    schedule: str = "compact"  # tile schedule for flash_pallas: 'compact' | 'dense'
-    bwd: str = "fused"  # flash_pallas backward: 'fused' (one-pass) | 'split'
+    # flash_pallas tile schedule / backward: None -> tuned cache, then
+    # 'compact' / 'fused'. Explicit strings override everywhere.
+    schedule: Optional[str] = None  # 'compact' | 'dense'
+    bwd: Optional[str] = None  # 'fused' (one-pass) | 'split'
     # Forward occupancy partitioning (flash_pallas, compact schedule):
-    # None -> shape-aware auto (kernels/ops.default_forward_partitions);
-    # explicit ints override (1 disables).
+    # None -> tuned cache, then shape-aware auto
+    # (kernels/ops.default_forward_partitions); explicit ints override
+    # (1 disables).
     num_q_bands: Optional[int] = None
     kv_splits: Optional[int] = None
-    decode_splits: int = 8
+    # Split-KV decode fan-out: None -> tuned cache
+    # (kernels/autotune.resolve_decode_splits), then 8.
+    decode_splits: Optional[int] = None
+    # Tuned-knob cache switch: None -> env REPRO_TUNED_CACHE (on by
+    # default); False forces pure-heuristic knob resolution.
+    use_tuned: Optional[bool] = None
     # Pallas interpret mode: None = auto (off on real TPUs, on elsewhere --
     # resolved in one place, kernels/compat.resolve_interpret).
     interpret: Optional[bool] = None
@@ -86,6 +95,7 @@ def attention(
             block_kv=cfg.block_kv, interpret=cfg.interpret,
             schedule=cfg.schedule, bwd=cfg.bwd,
             num_q_bands=cfg.num_q_bands, kv_splits=cfg.kv_splits,
+            use_tuned=cfg.use_tuned,
         )
     if cfg.impl == "ref":
         from repro.kernels.ref import attention_reference
@@ -105,6 +115,7 @@ def attention(
                 block_kv=cfg.block_kv, interpret=cfg.interpret,
                 schedule=cfg.schedule, bwd=cfg.bwd,
                 num_q_bands=cfg.num_q_bands, kv_splits=cfg.kv_splits,
+                use_tuned=cfg.use_tuned,
             )
         from repro.kernels.ops import flash_attention_pallas
 
@@ -112,6 +123,7 @@ def attention(
             q, k, v, spec, scale=scale, block_q=cfg.block_q, block_kv=cfg.block_kv,
             interpret=cfg.interpret, schedule=cfg.schedule, bwd=cfg.bwd,
             num_q_bands=cfg.num_q_bands, kv_splits=cfg.kv_splits,
+            use_tuned=cfg.use_tuned,
         )
     raise ValueError(f"unknown attention impl: {cfg.impl}")
 
@@ -133,17 +145,29 @@ def decode_attention(
 
     kv_segment_ids (B, S) + q_segment (B,) restrict the query to its own
     segment of a packed cache (see flash_decode / flash_decode_pallas).
+
+    ``cfg.decode_splits=None`` resolves the split-KV fan-out from the tuned
+    cache (keyed on the static padded cache size) with the same precedence
+    as the training knobs: explicit > tuned > default (8).
     """
+    splits = cfg.decode_splits
+    if splits is None:
+        from repro.kernels import autotune
+
+        splits = autotune.resolve_decode_splits(
+            k_cache.shape[1], q.shape[2], q.shape[3], q.dtype,
+            use_tuned=cfg.use_tuned,
+        )
     if cfg.impl == "flash_pallas":
         from repro.kernels.ops import flash_decode_pallas
 
         return flash_decode_pallas(
             q, k_cache, v_cache, cache_length, window=window, sink=sink, scale=scale,
-            num_splits=cfg.decode_splits, kv_segment_ids=kv_segment_ids,
+            num_splits=splits, kv_segment_ids=kv_segment_ids,
             q_segment=q_segment, interpret=cfg.interpret,
         )[0]
     return _decode.flash_decode(
         q, k_cache, v_cache, cache_length, window=window, sink=sink, scale=scale,
-        num_splits=cfg.decode_splits, kv_segment_ids=kv_segment_ids,
+        num_splits=splits, kv_segment_ids=kv_segment_ids,
         q_segment=q_segment,
     )[0]

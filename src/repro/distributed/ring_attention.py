@@ -69,10 +69,11 @@ class _RingMeta(NamedTuple):
     block_kv: Optional[int]
     scale: Optional[float]
     interpret: Optional[bool]
-    schedule: str
-    bwd: str                     # Pallas backward: 'fused' | 'split'
+    schedule: Optional[str]      # None -> tuned cache / 'compact' per rect
+    bwd: Optional[str]           # Pallas backward: 'fused' | 'split' | None
     num_q_bands: Optional[int]   # fwd occupancy partitioning of each
-    kv_splits: Optional[int]     # rectangle kernel (None -> shape auto)
+    kv_splits: Optional[int]     # rectangle kernel (None -> tuned/shape auto)
+    use_tuned: Optional[bool] = None  # tuned-knob cache switch (rect kernels)
 
 
 # ---------------------------------------------------------------------------
@@ -181,7 +182,7 @@ def _rect_fwd(q, k, v, spec: MaskSpec, meta: _RingMeta):
             q, k, v, spec, scale=meta.scale, block_q=meta.block_q,
             block_kv=meta.block_kv, interpret=meta.interpret,
             schedule=meta.schedule, num_q_bands=meta.num_q_bands,
-            kv_splits=meta.kv_splits,
+            kv_splits=meta.kv_splits, use_tuned=meta.use_tuned,
         )
     from repro.core.flash import flash_attention_with_lse
 
@@ -200,7 +201,7 @@ def _rect_bwd(q, k, v, o, lse, do, spec: MaskSpec, meta: _RingMeta):
         return flash_attention_pallas_shard_bwd(
             q, k, v, o, lse, do, spec, scale=meta.scale, block_q=meta.block_q,
             block_kv=meta.block_kv, interpret=meta.interpret,
-            schedule=meta.schedule, bwd=meta.bwd,
+            schedule=meta.schedule, bwd=meta.bwd, use_tuned=meta.use_tuned,
         )
     from repro.core.flash import FlashConfig, _bwd_impl
 
@@ -423,10 +424,11 @@ def ring_flash_attention(
     block_q: Optional[int] = None,
     block_kv: Optional[int] = None,
     interpret: Optional[bool] = None,
-    schedule: str = "compact",
-    bwd: str = "fused",
+    schedule: Optional[str] = None,
+    bwd: Optional[str] = None,
     num_q_bands: Optional[int] = None,
     kv_splits: Optional[int] = None,
+    use_tuned: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Differentiable ring flash attention over the ``axis`` mesh axis.
 
@@ -465,6 +467,7 @@ def ring_flash_attention(
                 q, k, v, spec, scale=scale, block_q=block_q, block_kv=block_kv,
                 interpret=interpret, schedule=schedule, bwd=bwd,
                 num_q_bands=num_q_bands, kv_splits=kv_splits,
+                use_tuned=use_tuned,
             )
         from repro.core.flash import flash_attention
 
@@ -479,6 +482,6 @@ def ring_flash_attention(
         spec=spec, layout=layout, mesh=mesh, axis=axis, batch_axes=batch_axes,
         impl=impl, block_q=block_q, block_kv=block_kv, scale=scale,
         interpret=interpret, schedule=schedule, bwd=bwd,
-        num_q_bands=num_q_bands, kv_splits=kv_splits,
+        num_q_bands=num_q_bands, kv_splits=kv_splits, use_tuned=use_tuned,
     )
     return _ring(q, k, v, meta)

@@ -26,11 +26,22 @@ Memory contract (DESIGN.md Section 2):
   * Tile scheduling is ``schedule="compact"`` by default (see
     kernels/schedule.py); ``"dense"`` keeps the legacy visit-every-tile
     grid for comparison.
+  * Knob resolution is measurement-driven (ISSUE 6): whenever a
+    ``PallasFlashConfig`` knob is ``None``, :func:`resolve_pallas_knobs`
+    consults the committed tuned cache (``kernels/autotune.py`` /
+    ``tuned.json``) before falling back to the hand heuristics. Precedence,
+    per knob: explicit arg > tuned cache > heuristic
+    (``default_block_sizes`` / ``default_forward_partitions`` /
+    ``_resolve_bwd``). ``use_tuned=False`` (or env ``REPRO_TUNED_CACHE=0``)
+    disables the cache and restores pure-heuristic resolution.
   * Block sizes default to a shape-aware table (``default_block_sizes``):
     clamped to the padded sequence length, ``block_kv`` shrinking as the
     head dim grows so the fused backward's f32 dK/dV scratch plus streamed
     tiles stay inside the VMEM budget. Pass explicit ``block_q``/
-    ``block_kv`` to override, exactly as before.
+    ``block_kv`` to override, exactly as before -- explicit values are
+    *legalized* (rounded up to the 8-sublane alignment the kernels assume,
+    clamped to the padded sequence length) with a warning, instead of
+    silently mis-padding the sequence.
 """
 
 from __future__ import annotations
@@ -38,6 +49,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
 from typing import Optional
 
 import jax
@@ -45,6 +57,7 @@ import jax.numpy as jnp
 
 from repro.core.masks import MaskSpec, pad_segments
 from repro.core.online_softmax import combine_lse_outputs
+from repro.kernels import autotune as _autotune
 from repro.kernels import flash_bwd as _bwd
 from repro.kernels import flash_decode as _dec
 from repro.kernels import flash_fwd as _fwd
@@ -65,6 +78,7 @@ __all__ = [
     "build_tile_schedule",
     "default_block_sizes",
     "default_forward_partitions",
+    "resolve_pallas_knobs",
     "flash_attention_pallas",
     "flash_attention_pallas_shard_bwd",
     "flash_attention_pallas_varlen",
@@ -76,24 +90,31 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class PallasFlashConfig:
+    """The five-knob kernel config. ``None`` = resolve per shape at call
+    time with precedence explicit arg > tuned cache > heuristic (see
+    :func:`resolve_pallas_knobs`)."""
+
     spec: MaskSpec
-    block_q: Optional[int] = None   # None -> default_block_sizes(...)
+    block_q: Optional[int] = None   # None -> tuned / default_block_sizes
     block_kv: Optional[int] = None
     scale: Optional[float] = None
     interpret: Optional[bool] = None  # None -> auto (off on TPU); compat.py
-    schedule: str = "compact"  # 'compact' | 'dense' tile schedule
-    bwd: str = "fused"  # 'fused' (one-pass) | 'split' (delta + dkv + dq)
+    schedule: Optional[str] = None  # 'compact' | 'dense'; None -> tuned/'compact'
+    bwd: Optional[str] = None  # 'fused' (one-pass) | 'split'; None -> tuned/'fused'
     # Forward partitioning (compact schedule; paper Section 3.2). None ->
-    # the shape-aware default_forward_partitions policy; explicit ints
-    # override (1 disables). Bands are bitwise-free; kv splits change the
-    # fp summation order (exact up to merge rounding).
+    # tuned cache, then the shape-aware default_forward_partitions policy;
+    # explicit ints override (1 disables). Bands are bitwise-free; kv
+    # splits change the fp summation order (exact up to merge rounding).
     num_q_bands: Optional[int] = None
     kv_splits: Optional[int] = None
+    # Tri-state tuned-cache switch: None -> env REPRO_TUNED_CACHE (on by
+    # default); False forces pure-heuristic resolution for every knob.
+    use_tuned: Optional[bool] = None
 
     def __post_init__(self):
-        if self.schedule not in ("compact", "dense"):
+        if self.schedule not in (None, "compact", "dense"):
             raise ValueError(f"unknown tile schedule: {self.schedule!r}")
-        if self.bwd not in ("fused", "split"):
+        if self.bwd not in (None, "fused", "split"):
             raise ValueError(f"unknown backward mode: {self.bwd!r}")
         for name in ("num_q_bands", "kv_splits"):
             val = getattr(self, name)
@@ -169,17 +190,20 @@ def default_forward_partitions(bh: int, t_q: int, t_kv: int):
     return bands, splits
 
 
-def _resolve_partitions(cfg: PallasFlashConfig, bh: int, t_q: int, t_kv: int):
-    """cfg knobs (None = auto) -> concrete (num_q_bands, kv_splits)."""
-    if cfg.schedule != "compact":
+def _resolve_partitions(cfg: PallasFlashConfig, tuned: dict, schedule: str,
+                        bh: int, t_q: int, t_kv: int):
+    """Knobs (explicit > tuned > auto) -> concrete (num_q_bands, kv_splits)."""
+    if schedule != "compact":
         if (cfg.num_q_bands or 1) > 1 or (cfg.kv_splits or 1) > 1:
             raise ValueError(
                 "num_q_bands/kv_splits require schedule='compact'"
             )
         return 1, 1
     auto_nb, auto_ks = default_forward_partitions(bh, t_q, t_kv)
-    nb = cfg.num_q_bands if cfg.num_q_bands is not None else auto_nb
-    ks = cfg.kv_splits if cfg.kv_splits is not None else auto_ks
+    nb = cfg.num_q_bands if cfg.num_q_bands is not None else \
+        tuned.get("num_q_bands", auto_nb)
+    ks = cfg.kv_splits if cfg.kv_splits is not None else \
+        tuned.get("kv_splits", auto_ks)
     return max(1, min(nb, t_q)), max(1, min(ks, t_kv))
 
 
@@ -203,6 +227,75 @@ def default_block_sizes(seq_q: int, seq_kv: int, head_dim: int):
     return min(bq, _round_up(seq_q, 8)), min(bk, _round_up(seq_kv, 8))
 
 
+def _legalize_block(name: str, val, seq: int, *, explicit: bool) -> int:
+    """Legalize one block-size knob against the kernels' layout contract.
+
+    The kernels assume 8-sublane-aligned blocks and pad the sequence to a
+    block multiple; a misaligned explicit value used to flow straight into
+    ``_round_up(S, block)`` and silently corrupt the padding geometry.
+    Non-positive / non-integer values raise; otherwise the value is rounded
+    up to a multiple of 8 and clamped to the padded sequence length, with a
+    warning when an *explicit* request had to change (the heuristic and the
+    tuned cache legalize silently -- clamping to a short sequence is their
+    normal operating mode, not a user error).
+    """
+    if isinstance(val, bool) or not isinstance(val, int):
+        raise ValueError(f"{name} must be an int >= 1, got {val!r}")
+    if val < 1:
+        raise ValueError(f"{name} must be >= 1, got {val}")
+    legal = min(_round_up(val, 8), _round_up(seq, 8))
+    if explicit and legal != val:
+        warnings.warn(
+            f"{name}={val} is not legal for seq={seq} (blocks must be "
+            f"8-aligned and <= the padded sequence); using {legal}",
+            stacklevel=3,
+        )
+    return legal
+
+
+def resolve_pallas_knobs(cfg: PallasFlashConfig, q_shape, k_shape,
+                         dtype=jnp.float32) -> dict:
+    """Concrete knob resolution for one call -- explicit > tuned > heuristic.
+
+    ``q_shape``/``k_shape`` are the public-layout shapes (B, S, H, D). Every
+    ``None`` knob on ``cfg`` is filled from the tuned cache entry for
+    (impl='flash_pallas', causal, seq, heads, head dim, dtype) when the
+    cache is enabled and has a (near-enough) entry -- see
+    ``kernels/autotune.lookup`` -- and from the hand heuristics otherwise.
+    Returns the full dict the kernel call contract is built from:
+    ``block_q``, ``block_kv``, ``schedule``, ``bwd`` (VMEM-guard resolved),
+    ``num_q_bands``, ``kv_splits``, plus ``tuned`` (the raw cache knobs
+    consulted; empty when disabled or missed) for introspection.
+    """
+    B, Sq, Hq, D = q_shape
+    _, Sk, Hk, _ = k_shape
+    spec = cfg.spec
+    tuned = {}
+    # Windowed / sink mask families were never swept; their knob landscape
+    # differs from plain causal/full, so they stay on the heuristics.
+    if (_autotune.cache_enabled(cfg.use_tuned) and spec.window is None
+            and spec.sink == 0):
+        tuned = _autotune.lookup(
+            "flash_pallas", spec.causal, Sq, Hq, D, dtype
+        )
+    bq_def, bk_def = default_block_sizes(Sq, Sk, D)
+    bq = cfg.block_q if cfg.block_q is not None else tuned.get("block_q", bq_def)
+    bk = cfg.block_kv if cfg.block_kv is not None else tuned.get("block_kv", bk_def)
+    bq = _legalize_block("block_q", bq, Sq, explicit=cfg.block_q is not None)
+    bk = _legalize_block("block_kv", bk, Sk, explicit=cfg.block_kv is not None)
+    Sqp, Skp = _round_up(Sq, bq), _round_up(Sk, bk)
+    schedule = cfg.schedule or tuned.get("schedule") or "compact"
+    bwd = cfg.bwd or tuned.get("bwd") or "fused"
+    nb, ks = _resolve_partitions(
+        cfg, tuned, schedule, B * Hq, Sqp // bq, Skp // bk
+    )
+    return dict(
+        block_q=bq, block_kv=bk, schedule=schedule,
+        bwd=_resolve_bwd(bwd, Hq // Hk, Sqp),
+        num_q_bands=nb, kv_splits=ks, tuned=dict(tuned),
+    )
+
+
 def _heads_layout(x: jnp.ndarray) -> jnp.ndarray:
     """(B, S, H, D) -> (B*H, S, D)."""
     B, S, H, D = x.shape
@@ -214,17 +307,13 @@ def _unheads_layout(x: jnp.ndarray, B: int, H: int) -> jnp.ndarray:
     return x.reshape(B, H, S, D).transpose(0, 2, 1, 3)
 
 
-def _prep(q, k, v, cfg: PallasFlashConfig):
+def _prep(q, k, v, cfg: PallasFlashConfig, resolved: dict):
     B, Sq, Hq, D = q.shape
     _, Sk, Hk, _ = k.shape
     assert Hq % Hk == 0
     G = Hq // Hk
     scale = cfg.scale if cfg.scale is not None else 1.0 / math.sqrt(D)
-    bq_def, bk_def = default_block_sizes(Sq, Sk, D)
-    bq = cfg.block_q if cfg.block_q is not None else bq_def
-    bk = cfg.block_kv if cfg.block_kv is not None else bk_def
-    bq = bq if Sq >= bq else _round_up(Sq, 8)
-    bk = bk if Sk >= bk else _round_up(Sk, 8)
+    bq, bk = resolved["block_q"], resolved["block_kv"]
     qh = _heads_layout(q)
     kh = _heads_layout(k)
     vh = _heads_layout(v)
@@ -251,16 +340,13 @@ def _prep_call(q, k, v, cfg: PallasFlashConfig, q_seg=None, kv_seg=None):
     tiles become cross-segment, so padded q rows attend nothing (l = 0 ->
     o = 0, lse = -inf; trimmed by the caller).
     """
-    qh, kh, vh, m = _prep(q, k, v, cfg)
-    # nsplit, NOT ks: `ks` is the kv segment-ids tensor throughout this file
-    nb, nsplit = _resolve_partitions(
-        cfg, m["B"] * m["Hq"], m["Sqp"] // m["bq"], m["Skp"] // m["bk"]
-    )
+    r = resolve_pallas_knobs(cfg, q.shape, k.shape, q.dtype)
+    qh, kh, vh, m = _prep(q, k, v, cfg, r)
     meta = _KernelMeta(
         spec=cfg.spec, block_q=m["bq"], block_kv=m["bk"], group=m["G"],
-        kv_valid=m["Sk"], schedule=cfg.schedule,
-        bwd=_resolve_bwd(cfg.bwd, m["G"], m["Sqp"]), interpret=cfg.interpret,
-        num_q_bands=nb, kv_splits=nsplit,
+        kv_valid=m["Sk"], schedule=r["schedule"],
+        bwd=r["bwd"], interpret=cfg.interpret,
+        num_q_bands=r["num_q_bands"], kv_splits=r["kv_splits"],
     )
     qs = ks = None
     if q_seg is not None:
@@ -379,22 +465,23 @@ def flash_attention_pallas(
     q, k, v, spec: MaskSpec = MaskSpec(causal=True), *,
     scale: Optional[float] = None,
     block_q: Optional[int] = None, block_kv: Optional[int] = None,
-    interpret: Optional[bool] = None, schedule: str = "compact",
-    bwd: str = "fused",
+    interpret: Optional[bool] = None, schedule: Optional[str] = None,
+    bwd: Optional[str] = None,
     num_q_bands: Optional[int] = None, kv_splits: Optional[int] = None,
+    use_tuned: Optional[bool] = None,
 ):
     """Differentiable FA2 via the Pallas TPU kernels. q (B,Sq,Hq,D).
 
-    ``bwd`` picks the backward: ``"fused"`` (one-pass kernel, default) or
-    ``"split"`` (delta + dkv + dq baseline). Block sizes default to the
-    shape-aware :func:`default_block_sizes` table; ``num_q_bands`` /
-    ``kv_splits`` (compact schedule) default to the shape-aware
-    :func:`default_forward_partitions` occupancy policy.
+    ``bwd`` picks the backward: ``"fused"`` (one-pass kernel, the resolved
+    default) or ``"split"`` (delta + dkv + dq baseline). Every ``None``
+    knob resolves per shape -- tuned cache first (``kernels/autotune``,
+    disable with ``use_tuned=False``), then the shape-aware heuristics
+    (:func:`default_block_sizes` / :func:`default_forward_partitions`).
     """
     cfg = PallasFlashConfig(
         spec=spec, block_q=block_q, block_kv=block_kv, scale=scale,
         interpret=interpret, schedule=schedule, bwd=bwd,
-        num_q_bands=num_q_bands, kv_splits=kv_splits,
+        num_q_bands=num_q_bands, kv_splits=kv_splits, use_tuned=use_tuned,
     )
     qh, kh, vh, _, _, m, meta = _prep_call(q, k, v, cfg)
     o = _flash_core(qh, kh, vh, meta)
@@ -405,9 +492,10 @@ def flash_attention_pallas_varlen(
     q, k, v, segment_ids, spec: MaskSpec = MaskSpec(causal=True), *,
     kv_segment_ids=None, scale: Optional[float] = None,
     block_q: Optional[int] = None, block_kv: Optional[int] = None,
-    interpret: Optional[bool] = None, schedule: str = "compact",
-    bwd: str = "fused",
+    interpret: Optional[bool] = None, schedule: Optional[str] = None,
+    bwd: Optional[str] = None,
     num_q_bands: Optional[int] = None, kv_splits: Optional[int] = None,
+    use_tuned: Optional[bool] = None,
 ):
     """Differentiable segment-packed (varlen) FA2 via the Pallas kernels.
 
@@ -437,7 +525,7 @@ def flash_attention_pallas_varlen(
     cfg = PallasFlashConfig(
         spec=spec, block_q=block_q, block_kv=block_kv, scale=scale,
         interpret=interpret, schedule=schedule, bwd=bwd,
-        num_q_bands=num_q_bands, kv_splits=kv_splits,
+        num_q_bands=num_q_bands, kv_splits=kv_splits, use_tuned=use_tuned,
     )
     qh, kh, vh, qs, ks, m, meta = _prep_call(q, k, v, cfg, segment_ids, kv_segment_ids)
     o = _flash_core_varlen(qh, kh, vh, qs, ks, meta)
@@ -456,8 +544,9 @@ def flash_attention_pallas_varlen_with_lse(
     q, k, v, segment_ids, spec: MaskSpec = MaskSpec(causal=True), *,
     kv_segment_ids=None, scale: Optional[float] = None,
     block_q: Optional[int] = None, block_kv: Optional[int] = None,
-    interpret: Optional[bool] = None, schedule: str = "compact",
+    interpret: Optional[bool] = None, schedule: Optional[str] = None,
     num_q_bands: Optional[int] = None, kv_splits: Optional[int] = None,
+    use_tuned: Optional[bool] = None,
 ):
     """Forward-only varlen (serving): returns (o, lse (B, Hq, Sq))."""
     if kv_segment_ids is None:
@@ -465,7 +554,7 @@ def flash_attention_pallas_varlen_with_lse(
     cfg = PallasFlashConfig(
         spec=spec, block_q=block_q, block_kv=block_kv, scale=scale,
         interpret=interpret, schedule=schedule,
-        num_q_bands=num_q_bands, kv_splits=kv_splits,
+        num_q_bands=num_q_bands, kv_splits=kv_splits, use_tuned=use_tuned,
     )
     return _fwd_with_lse(
         q, k, v, cfg, segment_ids.astype(jnp.int32), kv_segment_ids.astype(jnp.int32)
@@ -476,13 +565,14 @@ def flash_attention_pallas_with_lse(
     q, k, v, spec: MaskSpec = MaskSpec(causal=True), *,
     scale: Optional[float] = None,
     block_q: Optional[int] = None, block_kv: Optional[int] = None,
-    interpret: Optional[bool] = None, schedule: str = "compact",
+    interpret: Optional[bool] = None, schedule: Optional[str] = None,
     num_q_bands: Optional[int] = None, kv_splits: Optional[int] = None,
+    use_tuned: Optional[bool] = None,
 ):
     cfg = PallasFlashConfig(
         spec=spec, block_q=block_q, block_kv=block_kv, scale=scale,
         interpret=interpret, schedule=schedule,
-        num_q_bands=num_q_bands, kv_splits=kv_splits,
+        num_q_bands=num_q_bands, kv_splits=kv_splits, use_tuned=use_tuned,
     )
     return _fwd_with_lse(q, k, v, cfg)
 
@@ -491,8 +581,8 @@ def flash_attention_pallas_shard_bwd(
     q, k, v, o, lse, do, spec: MaskSpec = MaskSpec(causal=True), *,
     scale: Optional[float] = None,
     block_q: Optional[int] = None, block_kv: Optional[int] = None,
-    interpret: Optional[bool] = None, schedule: str = "compact",
-    bwd: str = "fused",
+    interpret: Optional[bool] = None, schedule: Optional[str] = None,
+    bwd: Optional[str] = None, use_tuned: Optional[bool] = None,
 ):
     """Shard-local Algorithm 2 against an externally merged (o, lse).
 
@@ -516,7 +606,7 @@ def flash_attention_pallas_shard_bwd(
     """
     cfg = PallasFlashConfig(
         spec=spec, block_q=block_q, block_kv=block_kv, scale=scale,
-        interpret=interpret, schedule=schedule, bwd=bwd,
+        interpret=interpret, schedule=schedule, bwd=bwd, use_tuned=use_tuned,
     )
     qh, kh, vh, _, _, m, meta = _prep_call(q, k, v, cfg)
     oh = _heads_layout(o.astype(jnp.float32))

@@ -46,8 +46,9 @@ def main():
             (params, _), meta = store.restore((params, None))
             print(f"[serve] restored step {meta.get('step')} from {args.ckpt_dir}")
 
-    attn_cfg = AttentionConfig(impl=args.attn, block_q=128, block_kv=128,
-                               decode_splits=4)
+    # Knobs left at None so prefill block sizes and the decode split fan-out
+    # resolve from the committed tuned cache (kernels/autotune) per shape.
+    attn_cfg = AttentionConfig(impl=args.attn)
     engine = ServingEngine(cfg, params, attn_cfg, max_batch=args.max_batch,
                            cache_size=args.cache)
     rng = np.random.default_rng(args.seed)

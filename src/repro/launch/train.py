@@ -118,7 +118,9 @@ def train(cfg: ModelConfig, loop: TrainLoopConfig, opt_cfg: Optional[AdamWConfig
 
 def _train(cfg: ModelConfig, loop: TrainLoopConfig, opt_cfg: Optional[AdamWConfig] = None):
     opt_cfg = opt_cfg or AdamWConfig(total_steps=loop.steps)
-    attn_cfg = AttentionConfig(impl=loop.attn_impl, block_q=256, block_kv=256, mode="auto")
+    # Block sizes left at None so training picks up tuned knobs (or the
+    # shape-aware heuristics) per shape instead of a hardcoded 256.
+    attn_cfg = AttentionConfig(impl=loop.attn_impl, mode="auto")
     data = make_source(DataConfig(
         batch_size=loop.batch_size, seq_len=loop.seq_len,
         vocab_size=cfg.vocab_size, seed=loop.seed,

@@ -1,6 +1,6 @@
 """AdamW with fp32 master weights and sharded moments (pure JAX).
 
-Mixed-precision contract (DESIGN.md Section 7): model params are compute-
+Mixed-precision contract (DESIGN.md Section 8): model params are compute-
 dtype (bf16 on TPU); the optimizer keeps fp32 master copies + moments. The
 gradient all-reduce happens in compute dtype (bf16 -- 2x less pod-link
 traffic, the "gradient compression" the brief asks for) and is accumulated

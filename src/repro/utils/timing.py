@@ -1,0 +1,69 @@
+"""Interleaved min-of-N wall-clock timing.
+
+The repo's single timing discipline, shared by the benchmark harness
+(``benchmarks/timing.py`` re-exports this module) and the kernel autotuner
+(``repro.kernels.autotune``). Two rules, both load-bearing:
+
+  * **min, not mean.** On a shared host every timing sample is the true
+    cost plus non-negative noise (scheduler preemption, page faults, GC,
+    turbo transitions). The minimum over N samples is the best estimator
+    of the true cost; the mean is biased upward by exactly the noise we
+    want to exclude. The original ``fig4_6_attn_speed._time`` used a
+    mean-of-3 and recorded a forward-only row *slower* than the matching
+    forward+backward row (BENCH_attn.json, ``ref/causal=0/seq=512``:
+    438ms fwd vs 356ms fwd+bwd) -- a physical impossibility that made the
+    whole trajectory untrustworthy and blocked the autotuner.
+  * **interleave competitors.** When two timings will be *compared*
+    (fwd vs fwd+bwd, tuned vs heuristic, fused vs split), round-robin the
+    candidates inside each iteration instead of timing them back-to-back
+    in blocks. Slow drift (thermal, co-tenant load) then hits every
+    candidate equally instead of biasing whichever ran during the bad
+    window.
+
+``jax.block_until_ready`` is applied to every call so asynchronous
+dispatch never lets a timing stop before the work does.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Mapping
+
+import jax
+
+__all__ = ["interleaved_timeit", "time_min"]
+
+DEFAULT_ITERS = 5
+
+
+def interleaved_timeit(
+    fns: Mapping[str, Callable],
+    *args,
+    iters: int = DEFAULT_ITERS,
+    warmup: int = 1,
+) -> Dict[str, float]:
+    """Time competing callables interleaved; return best seconds per name.
+
+    Every callable is invoked as ``fn(*args)``; ``warmup`` untimed calls
+    each (compilation + first-touch) precede ``iters`` timed rounds. In
+    each round the callables run round-robin in insertion order, and each
+    keeps the minimum of its per-round samples.
+    """
+    items = list(fns.items())
+    if not items:
+        return {}
+    for _, fn in items:
+        for _ in range(max(1, warmup)):
+            jax.block_until_ready(fn(*args))
+    best = {name: float("inf") for name, _ in items}
+    for _ in range(max(1, iters)):
+        for name, fn in items:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return best
+
+
+def time_min(fn: Callable, *args, iters: int = DEFAULT_ITERS, warmup: int = 1) -> float:
+    """Min-of-N timing of a single callable (degenerate interleave)."""
+    return interleaved_timeit({"fn": fn}, *args, iters=iters, warmup=warmup)["fn"]
