@@ -19,10 +19,15 @@
                       unbanded compact / dense) over a B x H x S grid:
                       grid-utilization ledger (asserted), kernel-layer
                       timing, banded exp census (also in the CI smoke)
+  serving_sweep       ISSUE 7 -- paged vs fixed-slot continuous batching at
+                      matched HBM on a Poisson mixed-length trace:
+                      tokens/sec, p50/p95 per-token latency, utilization,
+                      active-cell ledger (paged>fixed ASSERTED)
 
 Prints ``name,us_per_call,derived`` CSV.
 
-    python -m benchmarks.run [--json PATH] [--prune-stale] [names]
+    python -m benchmarks.run [--json PATH] [--json-serving PATH]
+                             [--prune-stale] [names]
 
 ``--json PATH`` additionally writes the rows as machine-readable records
 ``{"bench", "config", "us_per_call", "derived"}`` (the perf trajectory file
@@ -30,6 +35,11 @@ committed as BENCH_attn.json; CI runs a fast-tier smoke of it). An existing
 file is MERGED, not clobbered: rows whose (bench, config) the current run
 re-measured are replaced, everything else is kept — so the fast CI smoke
 (sched_cmp + ring_accounting) never erases the fig4/fig5 trajectory.
+
+``--json-serving PATH`` routes rows of the serving benches (bench name
+starting with ``serving``) into their own trajectory file (committed as
+BENCH_serving.json) with the same merge/dedupe/backup rules; with it set,
+``--json`` receives only the non-serving rows.
 
 Durability rules (the committed trajectory must survive bad runs):
 
@@ -51,7 +61,8 @@ import sys
 import time
 
 ALL = ("fig4_6_attn_speed", "nonmatmul_census", "table1_e2e", "roofline",
-       "ring_accounting", "occupancy_sweep", "autotune_sweep")
+       "ring_accounting", "occupancy_sweep", "autotune_sweep",
+       "serving_sweep")
 
 
 def _records(csv_rows):
@@ -104,19 +115,42 @@ def _load_existing(json_path: str):
     return list(deduped.values())
 
 
+def _merge_trajectory(json_path, records, prune_stale):
+    """Merge fresh records into the committed trajectory at json_path."""
+    fresh = {(r["bench"], r["config"]) for r in records}
+    fresh_benches = {b for b, _ in fresh}
+    kept = [r for r in _load_existing(json_path)
+            if (r["bench"], r["config"]) not in fresh]
+    if prune_stale:
+        stale = [r for r in kept if r["bench"] in fresh_benches]
+        if stale:
+            print(f"# --prune-stale: dropping {len(stale)} stale rows of "
+                  f"re-measured benches", file=sys.stderr)
+        kept = [r for r in kept if r["bench"] not in fresh_benches]
+    records = kept + records
+    with open(json_path, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"# wrote {json_path} ({len(records)} rows)", file=sys.stderr)
+
+
 def main() -> None:
     args = sys.argv[1:]
     json_path = None
+    serving_path = None
     prune_stale = "--prune-stale" in args
     if prune_stale:
         args.remove("--prune-stale")
-    if "--json" in args:
-        i = args.index("--json")
-        if i + 1 >= len(args):
-            sys.exit("usage: python -m benchmarks.run [--json PATH] "
-                     "[--prune-stale] [names]")
-        json_path = args[i + 1]
-        args = args[:i] + args[i + 2:]
+    for flag in ("--json", "--json-serving"):
+        if flag in args:
+            i = args.index(flag)
+            if i + 1 >= len(args):
+                sys.exit("usage: python -m benchmarks.run [--json PATH] "
+                         "[--json-serving PATH] [--prune-stale] [names]")
+            if flag == "--json":
+                json_path = args[i + 1]
+            else:
+                serving_path = args[i + 1]
+            args = args[:i] + args[i + 2:]
     names = args or list(ALL)
     csv = ["name,us_per_call,derived"]
     for name in names:
@@ -127,22 +161,14 @@ def main() -> None:
         dt = time.perf_counter() - t0
         print(f"# {name}: {len(csv) - before} rows in {dt:.1f}s", file=sys.stderr)
     print("\n".join(csv))
-    if json_path:
+    if json_path or serving_path:
         records = _records(csv[1:])
-        fresh = {(r["bench"], r["config"]) for r in records}
-        fresh_benches = {b for b, _ in fresh}
-        kept = [r for r in _load_existing(json_path)
-                if (r["bench"], r["config"]) not in fresh]
-        if prune_stale:
-            stale = [r for r in kept if r["bench"] in fresh_benches]
-            if stale:
-                print(f"# --prune-stale: dropping {len(stale)} stale rows of "
-                      f"re-measured benches", file=sys.stderr)
-            kept = [r for r in kept if r["bench"] not in fresh_benches]
-        records = kept + records
-        with open(json_path, "w") as f:
-            json.dump(records, f, indent=1)
-        print(f"# wrote {json_path} ({len(records)} rows)", file=sys.stderr)
+        if serving_path:
+            serving = [r for r in records if r["bench"].startswith("serving")]
+            records = [r for r in records if not r["bench"].startswith("serving")]
+            _merge_trajectory(serving_path, serving, prune_stale)
+        if json_path:
+            _merge_trajectory(json_path, records, prune_stale)
 
 
 if __name__ == "__main__":

@@ -166,6 +166,38 @@ def cache_specs(cfg: ModelConfig, B: int, cache: int, enc_frames: int = 1500):
     return caches
 
 
+def paged_cache_specs(cfg: ModelConfig, num_pages: int, page_size: int):
+    """Cache tree for the *paged* serving engine: per-layer physical page
+    planes ``(Hkv, num_pages, page_size, head_dim)`` shared by all resident
+    sequences through one block table (serving/kv_pool.py). Same tree
+    structure as :func:`cache_specs` (scan-stacked groups + tail) so
+    lm.decode_step's scan machinery is unchanged; the leaf layout is
+    kernel-native for kernels/flash_decode.flash_decode_paged_kernel (the
+    contiguous path's per-step (B,S,Hk,D) -> head-major transpose is gone).
+    Attention-only: a page holds no recurrent SSM state."""
+    act = jnp.dtype(cfg.dtype)
+    kinds = tuple(cfg.layer_pattern) + tuple(cfg.tail_pattern)
+    assert cfg.family != "encdec" and cfg.ssm is None and all(
+        k in ("attn", "attn_local") for k in kinds
+    ), "paged caches serve attention-only decoder configs"
+
+    def layer_spec():
+        shape = (cfg.num_kv_heads, num_pages, page_size, cfg.head_dim)
+        return {"kv": {"k": _sds(shape, act), "v": _sds(shape, act)}}
+
+    caches: Dict[str, Any] = {}
+    if cfg.num_groups:
+        group = {f"slot_{u}": layer_spec()
+                 for u in range(len(cfg.layer_pattern))}
+        if cfg.scan_layers and cfg.num_groups > 1:
+            caches["groups"] = _stack(group, cfg.num_groups)
+        else:
+            caches["groups"] = [group for _ in range(cfg.num_groups)]
+    if cfg.tail_pattern:
+        caches["tail"] = [layer_spec() for _ in cfg.tail_pattern]
+    return caches
+
+
 # --------------------------------------------------------------------------
 # Reduced configs for CPU smoke tests
 # --------------------------------------------------------------------------

@@ -171,3 +171,47 @@ def decode_attention(
         num_splits=splits, kv_segment_ids=kv_segment_ids,
         q_segment=q_segment,
     )[0]
+
+
+def decode_attention_paged(
+    q: jnp.ndarray,  # (B, 1, Hq, D)
+    k_pages: jnp.ndarray,  # (Hkv, P, page_size, D) pool planes
+    v_pages: jnp.ndarray,
+    cache_length: jnp.ndarray,  # (B,) int32 logical lengths
+    block_table: jnp.ndarray,  # (B, n_pages) int32
+    cfg: AttentionConfig = AttentionConfig(),
+    *,
+    window: Optional[int] = None,
+    sink: int = 0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Single-token decode against a *paged* KV cache. Returns (B,1,Hq,D).
+
+    The cache is the pool's physical page planes plus a per-sequence block
+    table (serving/kv_pool.py); rows with ``cache_length == 0`` (all-null
+    table) read no KV at all on the Pallas path. ``cfg.decode_splits=None``
+    resolves the split fan-out from the tuned cache keyed on the *logical*
+    capacity ``n_pages * page_size`` and the page size
+    (kernels/autotune.resolve_decode_splits)."""
+    ps = k_pages.shape[2]
+    logical = block_table.shape[1] * ps
+    splits = cfg.decode_splits
+    if splits is None:
+        from repro.kernels import autotune
+
+        splits = autotune.resolve_decode_splits(
+            logical, q.shape[2], q.shape[3], q.dtype,
+            page_size=ps, use_tuned=cfg.use_tuned,
+        )
+    if cfg.impl == "flash_pallas":
+        from repro.kernels.ops import flash_decode_paged_pallas
+
+        return flash_decode_paged_pallas(
+            q, k_pages, v_pages, cache_length, block_table,
+            window=window, sink=sink, scale=scale, num_splits=splits,
+            interpret=cfg.interpret,
+        )[0]
+    return _decode.flash_decode_paged(
+        q, k_pages, v_pages, cache_length, block_table,
+        window=window, sink=sink, scale=scale, num_splits=splits,
+    )[0]

@@ -98,3 +98,35 @@ def flash_decode(
         o.reshape(B, 1, Hq, D).astype(q.dtype),
         lse.reshape(B, Hq, 1),
     )
+
+
+def flash_decode_paged(
+    q: jnp.ndarray,  # (B, 1, Hq, D)
+    k_pages: jnp.ndarray,  # (Hkv, P, page_size, D) physical page planes
+    v_pages: jnp.ndarray,
+    cache_length: jnp.ndarray,  # (B,) int32 logical lengths
+    block_table: jnp.ndarray,  # (B, n_pages) int32 logical -> physical page
+    *,
+    window: Optional[int] = None,
+    sink: int = 0,
+    scale: Optional[float] = None,
+    num_splits: int = 8,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """XLA fallback for page-indirect decode: gather the block table's
+    pages into a contiguous (B, n_pages*ps, Hkv, D) view, then run the
+    plain split-KV decode. Functionally the oracle for the Pallas kernel
+    (tests assert parity); positions >= cache_length are masked, so stale
+    or null-page contents never contribute."""
+    B = q.shape[0]
+    Hk, _, ps, D = k_pages.shape
+    n_pages = block_table.shape[1]
+    tbl = block_table.astype(jnp.int32)
+    # (Hk, B, n_pages, ps, D) -> (B, n_pages*ps, Hk, D)
+    def gather(pages):
+        g = pages[:, tbl]
+        return jnp.moveaxis(g, 0, 3).reshape(B, n_pages * ps, Hk, D)
+
+    return flash_decode(
+        q, gather(k_pages), gather(v_pages), cache_length,
+        window=window, sink=sink, scale=scale, num_splits=num_splits,
+    )

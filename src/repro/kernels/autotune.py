@@ -72,6 +72,7 @@ __all__ = [
     "save_cache",
     "sweep_attention_shape",
     "sweep_decode_shape",
+    "sweep_paged_decode_shape",
     "validate_doc",
 ]
 
@@ -134,7 +135,10 @@ def new_doc(backend: str, entries: Optional[dict] = None) -> dict:
 
 
 def _knob_spec(impl: str) -> Dict[str, type]:
-    return DECODE_KNOBS if impl == "flash_decode" else ATTN_KNOBS
+    # Paged decode entries key as "flash_decode_paged<page_size>": the page
+    # size changes the kernel's DMA granularity, so geometries tuned at one
+    # page size never answer lookups for another.
+    return DECODE_KNOBS if impl.startswith("flash_decode") else ATTN_KNOBS
 
 
 def validate_doc(doc: object) -> dict:
@@ -271,12 +275,20 @@ def lookup(impl: str, causal: bool, seq: int, heads: int, head_dim: int,
 
 
 def resolve_decode_splits(seq: int, heads: int, head_dim: int, dtype, *,
+                          page_size: Optional[int] = None,
                           use_tuned: Optional[bool] = None,
                           default: int = 8) -> int:
-    """Tuned ``num_splits`` for split-KV decode against a seq-long cache."""
+    """Tuned ``num_splits`` for split-KV decode against a seq-long cache.
+
+    ``page_size`` switches to the paged-decode key family
+    (``flash_decode_paged<ps>``, ``seq`` = the *logical* capacity
+    ``n_pages * page_size``) so the serving engine's page-indirect step
+    consults its own tuned entries rather than the contiguous cache's."""
     if not cache_enabled(use_tuned):
         return default
-    tuned = lookup("flash_decode", True, seq, heads, head_dim, dtype)
+    impl = ("flash_decode" if page_size is None
+            else f"flash_decode_paged{int(page_size)}")
+    tuned = lookup(impl, True, seq, heads, head_dim, dtype)
     return int(tuned.get("num_splits", default))
 
 
@@ -437,11 +449,71 @@ def sweep_decode_shape(
     return cache_key("flash_decode", True, seq, heads, head_dim, dt), entry
 
 
+def _paged_fixture(seq, heads, head_dim, batch, page_size, dt):
+    """Random paged-decode operands at full logical occupancy, with the
+    physical pages deliberately shuffled (the serving steady state)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    n_pages = seq // page_size
+    P = batch * n_pages + 1  # + the reserved null page 0
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(kq, (batch, 1, heads, head_dim), jnp.float32).astype(dt)
+    kp = jax.random.normal(kk, (heads, P, page_size, head_dim), jnp.float32).astype(dt)
+    vp = jax.random.normal(kv, (heads, P, page_size, head_dim), jnp.float32).astype(dt)
+    perm = np.random.default_rng(0).permutation(P - 1) + 1
+    tbl = jnp.asarray(perm.reshape(batch, n_pages), jnp.int32)
+    lens = jnp.full((batch,), seq, jnp.int32)
+    return q, kp, vp, lens, tbl
+
+
+def sweep_paged_decode_shape(
+    *, seq: int, heads: int, head_dim: int, page_size: int, batch: int = 4,
+    dtype="float32", iters: int = 3, interpret: Optional[bool] = None,
+    log=None,
+) -> Tuple[str, Dict[str, object]]:
+    """Measure page-indirect decode ``num_splits`` for one logical capacity
+    (``seq = n_pages * page_size``) at one page size -- the serving path's
+    geometry (kernels/flash_decode.flash_decode_paged_kernel)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import flash_decode_paged_pallas
+    from repro.utils.timing import interleaved_timeit
+
+    dt = jnp.dtype(dtype)
+    assert seq % page_size == 0, "logical capacity must be page-aligned"
+    n_pages = seq // page_size
+    q, kp, vp, lens, tbl = _paged_fixture(seq, heads, head_dim, batch,
+                                          page_size, dt)
+
+    def _fn(ns):
+        return jax.jit(lambda q, kp, vp, lens, tbl: flash_decode_paged_pallas(
+            q, kp, vp, lens, tbl, num_splits=ns, interpret=interpret
+        )[0])
+
+    splits = sorted({ns for ns in (1, 2, 4, 8, 16) if ns <= n_pages})
+    best = interleaved_timeit(
+        {str(ns): _fn(ns) for ns in splits}, q, kp, vp, lens, tbl, iters=iters
+    )
+    win = min(best, key=best.get)
+    if log:
+        for name, t in sorted(best.items(), key=lambda kv: kv[1]):
+            log(f"  paged_decode {t*1e6:10.0f}us  num_splits={name}")
+    entry = dict(num_splits=int(win), us_fwd=round(best[win] * 1e6, 1),
+                 batch=batch, iters=iters)
+    return cache_key(f"flash_decode_paged{page_size}", True, seq, heads,
+                     head_dim, dt), entry
+
+
 # The BENCH_attn.json benchmark shapes (fig4_6 protocol: batch*seq = 4096
 # tokens, 4 heads, head dim 64; flash_pallas rows run seq <= 512, the
 # bwd_cmp/kernel-layer rows run causal seq 1024/2048) plus the decode
-# serving shape. Each is (kind, seq, heads, head_dim, causal, batch).
-BENCH_SHAPES: Tuple[Tuple[str, int, int, int, bool, int], ...] = (
+# serving shapes. Each is (kind, seq, heads, head_dim, causal, batch) with
+# an optional trailing page_size for kind == "paged_decode" (seq is then
+# the logical capacity n_pages * page_size).
+BENCH_SHAPES: Tuple[Tuple, ...] = (
     ("attn", 256, 4, 64, False, 16),
     ("attn", 256, 4, 64, True, 16),
     ("attn", 512, 4, 64, False, 8),
@@ -449,21 +521,29 @@ BENCH_SHAPES: Tuple[Tuple[str, int, int, int, bool, int], ...] = (
     ("attn", 1024, 4, 64, True, 4),
     ("attn", 2048, 4, 64, True, 2),
     ("decode", 512, 4, 64, True, 4),
+    ("paged_decode", 512, 4, 64, True, 4, 64),
 )
 
 # Tiny shapes for the CI interpret-mode smoke sweep (seconds, not minutes).
-SMOKE_SHAPES: Tuple[Tuple[str, int, int, int, bool, int], ...] = (
+SMOKE_SHAPES: Tuple[Tuple, ...] = (
     ("attn", 128, 2, 32, True, 2),
     ("attn", 128, 2, 32, False, 2),
     ("decode", 128, 2, 32, True, 2),
+    ("paged_decode", 128, 2, 32, True, 2, 32),
 )
 
 
 def _sweep_one(kind_shape, iters, log):
-    kind, seq, heads, hd, causal, batch = kind_shape
+    kind, seq, heads, hd, causal, batch = kind_shape[:6]
+    page = kind_shape[6] if len(kind_shape) > 6 else None
     if log:
         log(f"sweep {kind} seq={seq} heads={heads} hd={hd} "
-            f"causal={int(causal)} batch={batch}")
+            f"causal={int(causal)} batch={batch}"
+            + (f" page={page}" if page else ""))
+    if kind == "paged_decode":
+        return sweep_paged_decode_shape(seq=seq, heads=heads, head_dim=hd,
+                                        page_size=page, batch=batch,
+                                        iters=iters, log=log)
     if kind == "decode":
         return sweep_decode_shape(seq=seq, heads=heads, head_dim=hd,
                                   batch=batch, iters=iters, log=log)
@@ -503,7 +583,11 @@ def check_cache(shapes, *, path: Optional[str] = None, iters: int = 3,
     import jax.numpy as jnp
 
     from repro.core.masks import MaskSpec
-    from repro.kernels.ops import flash_attention_pallas, flash_decode_pallas
+    from repro.kernels.ops import (
+        flash_attention_pallas,
+        flash_decode_paged_pallas,
+        flash_decode_pallas,
+    )
     from repro.utils.timing import interleaved_timeit
 
     path = _cache_path(path)
@@ -511,8 +595,11 @@ def check_cache(shapes, *, path: Optional[str] = None, iters: int = 3,
         doc = validate_doc(json.load(f))
     failures: List[str] = []
     for kind_shape in shapes:
-        kind, seq, heads, hd, causal, batch = kind_shape
-        impl = "flash_decode" if kind == "decode" else "flash_pallas"
+        kind, seq, heads, hd, causal, batch = kind_shape[:6]
+        page = kind_shape[6] if len(kind_shape) > 6 else None
+        impl = ("flash_pallas" if kind == "attn"
+                else f"flash_decode_paged{page}" if kind == "paged_decode"
+                else "flash_decode")
         key = cache_key(impl, causal, seq, heads, hd, "float32")
         committed = doc["entries"].get(key)
         if committed is None:
@@ -525,7 +612,14 @@ def check_cache(shapes, *, path: Optional[str] = None, iters: int = 3,
                  if k in knob_names and v is not None}
         fresh_knobs = {k: v for k, v in fresh.items()
                        if k in knob_names and v is not None}
-        if kind == "decode":
+        if kind == "paged_decode":
+            args = _paged_fixture(seq, heads, hd, batch, page, jnp.float32)
+
+            def _mk(kn):
+                return jax.jit(
+                    lambda q, kp, vp, lens, tbl: flash_decode_paged_pallas(
+                        q, kp, vp, lens, tbl, **kn)[0])
+        elif kind == "decode":
             kq, kk, kv = jax.random.split(jax.random.PRNGKey(1), 3)
             q = jax.random.normal(kq, (batch, 1, heads, hd), jnp.float32)
             kc = jax.random.normal(kk, (batch, seq, heads, hd), jnp.float32)

@@ -667,3 +667,35 @@ def flash_decode_pallas(
         o.reshape(B, 1, Hq, D).astype(q.dtype),
         lse.reshape(B, Hq, 1),
     )
+
+
+def flash_decode_paged_pallas(
+    q, k_pages, v_pages, cache_length, block_table, *,
+    window: Optional[int] = None, sink: int = 0, scale: Optional[float] = None,
+    num_splits: int = 8, interpret: Optional[bool] = None,
+):
+    """Page-indirect split-KV decode. q (B,1,Hq,D); k/v_pages (Hkv,P,ps,D);
+    cache_length (B,) logical lengths; block_table (B, n_pages) int32
+    physical page ids (0 = the reserved null page). Returns (o, lse) with
+    the same contract as :func:`flash_decode_pallas` -- the serving engine
+    swaps a contiguous cache for pool planes without touching the merge."""
+    B, one, Hq, D = q.shape
+    assert one == 1
+    Hk = k_pages.shape[0]
+    G = Hq // Hk
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    qh = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    qh = qh.reshape(B, Hk, G, D).reshape(B * Hk, G, D)
+    lens = jnp.repeat(cache_length.astype(jnp.int32), Hk)
+    o_parts, lse_parts = _dec.flash_decode_paged_kernel(
+        qh, k_pages, v_pages, lens, block_table, num_splits=num_splits,
+        window=window, sink=sink, interpret=interpret,
+    )
+    o, lse = combine_lse_outputs(
+        jnp.moveaxis(o_parts, 1, 0), jnp.moveaxis(lse_parts, 1, 0)
+    )
+    return (
+        o.reshape(B, 1, Hq, D).astype(q.dtype),
+        lse.reshape(B, Hq, 1),
+    )

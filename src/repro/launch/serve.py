@@ -4,6 +4,12 @@ engine over a file or synthetic stream of requests.
 Usage:
   python -m repro.launch.serve --arch qwen3-8b --reduce --requests 8
   python -m repro.launch.serve --arch hymba-1.5b --reduce --ckpt-dir /ck
+  python -m repro.launch.serve --arch qwen3-8b --reduce --engine paged \
+      --num-pages 128 --page-size 16
+
+``--engine fixed`` (default) reserves a worst-case contiguous cache slice
+per slot; ``--engine paged`` serves from a shared page pool with
+block-table indirect flash decode (attention-only archs).
 """
 
 from __future__ import annotations
@@ -19,7 +25,7 @@ from repro.checkpoint.store import CheckpointStore
 from repro.configs import registry
 from repro.core.attention import AttentionConfig
 from repro.models import lm
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import PagedServingEngine, Request, ServingEngine
 
 
 def main():
@@ -33,6 +39,13 @@ def main():
     ap.add_argument("--attn", default="flash_xla")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", choices=("fixed", "paged"), default="fixed")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="paged: pool size; default matches the fixed "
+                         "engine's HBM (max_batch * cache / page_size + 1)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pages-per-seq", type=int, default=None,
+                    help="paged: block-table width; default cache/page_size")
     args = ap.parse_args()
 
     cfg = registry.get(args.arch)
@@ -49,8 +62,19 @@ def main():
     # Knobs left at None so prefill block sizes and the decode split fan-out
     # resolve from the committed tuned cache (kernels/autotune) per shape.
     attn_cfg = AttentionConfig(impl=args.attn)
-    engine = ServingEngine(cfg, params, attn_cfg, max_batch=args.max_batch,
-                           cache_size=args.cache)
+    if args.engine == "paged":
+        num_pages = args.num_pages or (
+            args.max_batch * args.cache // args.page_size + 1
+        )
+        n_max = args.pages_per_seq or max(1, args.cache // args.page_size)
+        engine = PagedServingEngine(
+            cfg, params, attn_cfg, max_batch=args.max_batch,
+            num_pages=num_pages, page_size=args.page_size,
+            pages_per_seq_max=n_max,
+        )
+    else:
+        engine = ServingEngine(cfg, params, attn_cfg, max_batch=args.max_batch,
+                               cache_size=args.cache)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         prompt = rng.integers(1, min(cfg.vocab_size, 1000),
@@ -61,10 +85,15 @@ def main():
     finished = engine.run(max_ticks=10_000)
     dt = time.perf_counter() - t0
     toks = sum(len(r.generated) for r in finished.values())
-    print(json.dumps({
-        "requests": len(finished), "ticks": engine.ticks,
-        "generated_tokens": toks, "tok_per_s": round(toks / dt, 1),
-    }))
+    summary = {
+        "engine": args.engine, "requests": len(finished),
+        "ticks": engine.ticks, "generated_tokens": toks,
+        "tok_per_s": round(toks / dt, 1),
+    }
+    if args.engine == "paged":
+        summary["decode_compiles"] = engine.decode_compiles
+        summary["preemptions"] = engine.preemptions
+    print(json.dumps(summary))
     for rid in sorted(finished)[:4]:
         print(f"  req {rid}: {finished[rid].generated}")
 

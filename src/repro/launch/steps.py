@@ -144,3 +144,59 @@ def build_serve_step(cfg: ModelConfig, attn_cfg: AttentionConfig):
         return next_token, new_caches
 
     return serve_step
+
+
+def build_paged_serve_step(cfg: ModelConfig, attn_cfg: AttentionConfig):
+    """Decode step over the paged cache. All shapes are functions of
+    (max_batch, pages_per_seq_max, page_size) only -- never of which
+    requests are resident -- so the jitted step compiles exactly once and
+    requests join/leave with zero recompiles (pinned by
+    tests/test_paged.py)."""
+
+    def paged_serve_step(params, token, caches, block_table, cache_len):
+        logits, new_caches = lm.decode_step(
+            cfg, params, token, caches, cache_len, attn_cfg,
+            block_table=block_table,
+        )
+        next_token = jnp.argmax(logits[..., : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        return next_token, new_caches
+
+    return paged_serve_step
+
+
+def build_paged_admit_step(cfg: ModelConfig, attn_cfg: AttentionConfig,
+                           page_size: int):
+    """Batched admission: one lens-masked bucketed prefill for a whole
+    same-bucket group, its contiguous caches scattered straight into the
+    pool's page planes at the ``dest`` physical pages.
+
+    ``batch['inputs']`` (W, pad_to) right-padded prompts, ``batch['lens']``
+    (W,) true lengths, ``dest`` (W, pad_to_pages) int32 physical page per
+    logical prefill page (0 = the null page for rows/pages that must not
+    land anywhere -- width-padding rows and overflow). Shapes depend only
+    on (pad_to, W), so jit compiles once per (bucket, admission width)."""
+
+    def scatter(paged, contig, dest):
+        # contig (..., W, S, Hk, hd) -> pages (..., Hk, W, NP, ps, hd)
+        *lead, W, S, Hk, hd = contig.shape
+        NP = S // page_size
+        v = contig.reshape(*lead, W, NP, page_size, Hk, hd)
+        v = jnp.moveaxis(v, -2, -5)  # head plane first, like the pool
+        return paged.at[..., dest, :, :].set(v.astype(paged.dtype))
+
+    def admit_step(params, batch, caches, dest):
+        tokens = batch["inputs"]
+        cache_size = -(-tokens.shape[1] // page_size) * page_size
+        h_last, prefill_caches, lens_total = lm.prefill(
+            cfg, params, tokens, attn_cfg, cache_size, lens=batch.get("lens"),
+        )
+        logits = lm.logits_from_hidden(cfg, params, h_last)
+        next_token = jnp.argmax(
+            logits[..., : cfg.vocab_size], axis=-1
+        ).astype(jnp.int32)
+        new_caches = jax.tree.map(
+            functools.partial(scatter, dest=dest), caches, prefill_caches
+        )
+        return next_token, lens_total, new_caches
+
+    return admit_step

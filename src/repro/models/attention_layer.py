@@ -14,7 +14,12 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.attention import AttentionConfig, attention, decode_attention
+from repro.core.attention import (
+    AttentionConfig,
+    attention,
+    decode_attention,
+    decode_attention_paged,
+)
 from repro.core.masks import MaskSpec
 from repro.distributed import sharding as shd
 from repro.distributed.context_parallel import gather_kv
@@ -171,9 +176,22 @@ def prefill_attention(
 def decode_attention_step(
     p, cfg, x_new: jnp.ndarray, cache: dict, cache_len: jnp.ndarray,
     attn_cfg: AttentionConfig, *, rope_theta=None, window=None, sink: int = 0,
+    block_table: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, dict]:
-    """One decode step. x_new (B,1,d); cache k/v (B,S,Hk,hd);
-    cache_len (B,) = number of valid entries BEFORE this token."""
+    """One decode step. x_new (B,1,d); cache_len (B,) = number of valid
+    entries BEFORE this token.
+
+    Contiguous cache (``block_table=None``): cache k/v (B,S,Hk,hd), the new
+    KV is inserted at position cache_len.
+
+    Paged cache (``block_table`` (B, n_pages) int32): cache k/v are the
+    pool's physical page planes (Hk, P, page_size, hd); the new KV scatters
+    into page ``table[b, L // ps]`` at offset ``L % ps`` and attention runs
+    page-indirect (core.attention.decode_attention_paged). Rows with
+    cache_len == 0 are *inactive slots* (a real sequence always has a
+    non-empty prompt): their write lands in the reserved null page 0 and
+    their attention length is forced to 0, so a free/finished slot costs no
+    KV reads at all."""
     B = x_new.shape[0]
     q = _project_q(p, cfg, x_new)
     k_new, v_new = _project_kv(p, cfg, x_new)
@@ -181,6 +199,24 @@ def decode_attention_step(
         pos = cache_len[:, None]  # (B,1) absolute position of the new token
         q = apply_rope(q, pos, rope_theta)
         k_new = apply_rope(k_new, pos, rope_theta)
+
+    if block_table is not None:
+        ps = cache["k"].shape[2]
+        page = jnp.take_along_axis(
+            block_table, (cache_len // ps)[:, None], axis=1
+        )[:, 0]  # (B,) physical page of the write position
+        off = cache_len % ps
+        def scatter(planes, new):
+            vals = new[:, 0].transpose(1, 0, 2)  # (Hk, B, hd)
+            return planes.at[:, page, off].set(vals.astype(planes.dtype))
+        k_pages = scatter(cache["k"], k_new)
+        v_pages = scatter(cache["v"], v_new)
+        lengths = jnp.where(cache_len > 0, cache_len + 1, 0)
+        o = decode_attention_paged(
+            q, k_pages, v_pages, lengths, block_table, attn_cfg,
+            window=window, sink=sink,
+        )
+        return _out(p, cfg, o), {"k": k_pages, "v": v_pages}
 
     def insert(buf, new):
         def one(b_row, n_row, idx):

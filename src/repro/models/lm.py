@@ -148,7 +148,7 @@ def prefill_layer(kind, p, cfg, x, positions, attn_cfg, cache_size):
     return constrain(x, "batch", "seq", "embed"), cache
 
 
-def decode_layer(kind, p, cfg, x, cache, cache_len, attn_cfg):
+def decode_layer(kind, p, cfg, x, cache, cache_len, attn_cfg, block_table=None):
     h = L.apply_norm(p["ln1"], x, cfg.norm_eps, cfg.norm)
     spec = _spec_for(cfg, kind)
     theta = _theta_for(cfg, kind)
@@ -156,12 +156,19 @@ def decode_layer(kind, p, cfg, x, cache, cache_len, attn_cfg):
         mix, kv = decode_attention_step(
             p["mixer"], cfg, h, cache["kv"], cache_len, attn_cfg,
             rope_theta=theta, window=spec.window, sink=spec.sink,
+            block_table=block_table,
         )
         new_cache = {"kv": kv}
     elif kind == "mamba":
+        if block_table is not None:
+            raise ValueError("paged decode serves attention layers only "
+                             f"(got layer kind {kind!r})")
         mix, ssm = decode_mamba_step(p["mixer"], cfg, h, cache["ssm"])
         new_cache = {"ssm": ssm}
     else:
+        if block_table is not None:
+            raise ValueError("paged decode serves attention layers only "
+                             f"(got layer kind {kind!r})")
         mix, new_cache = decode_hybrid_step(
             p["mixer"], cfg, h, cache, cache_len, attn_cfg,
             rope_theta=theta, window=spec.window, sink=spec.sink,
@@ -334,9 +341,15 @@ def prefill(cfg, params, tokens, attn_cfg: AttentionConfig, cache_size: int,
     return h_last, caches, n_prefix + lens
 
 
-def decode_step(cfg, params, token, caches, cache_len, attn_cfg: AttentionConfig):
+def decode_step(cfg, params, token, caches, cache_len, attn_cfg: AttentionConfig,
+                block_table=None):
     """token (B,1) int32; cache_len (B,) valid entries per sequence.
-    -> (logits (B,1,V), new_caches)."""
+    -> (logits (B,1,V), new_caches).
+
+    ``block_table`` (B, n_pages) int32 switches every attention layer to
+    the paged cache path (pool page planes instead of per-slot contiguous
+    caches -- see attention_layer.decode_attention_step); the table is
+    shared by all layers."""
     h = L.embed_tokens(params["embed"], token)
     if cfg.embed_scale_by_dim:
         h = (h.astype(jnp.float32) * (cfg.d_model ** 0.5)).astype(h.dtype)
@@ -349,7 +362,8 @@ def decode_step(cfg, params, token, caches, cache_len, attn_cfg: AttentionConfig
         new_caches = {}
         for u, kind in enumerate(cfg.layer_pattern):
             x, nc = decode_layer(
-                kind, gp[f"slot_{u}"], cfg, x, cache[f"slot_{u}"], cache_len, attn_cfg
+                kind, gp[f"slot_{u}"], cfg, x, cache[f"slot_{u}"], cache_len,
+                attn_cfg, block_table,
             )
             new_caches[f"slot_{u}"] = nc
         return x, new_caches
@@ -369,7 +383,8 @@ def decode_step(cfg, params, token, caches, cache_len, attn_cfg: AttentionConfig
         new_caches["tail"] = []
         for i, kind in enumerate(cfg.tail_pattern):
             h, nc = decode_layer(
-                kind, params["tail"][i], cfg, h, caches["tail"][i], cache_len, attn_cfg
+                kind, params["tail"][i], cfg, h, caches["tail"][i], cache_len,
+                attn_cfg, block_table,
             )
             new_caches["tail"].append(nc)
     h = L.apply_norm(params["ln_f"], h, cfg.norm_eps, cfg.norm)

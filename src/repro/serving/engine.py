@@ -1,25 +1,28 @@
-"""Batched serving engine: slot-based continuous batching over a shared
-fixed-capacity KV cache.
+"""Continuous-batching serving engines.
 
-Design (vLLM-style, sized down to JAX/XLA static shapes):
-  * ``max_batch`` slots share batched per-layer caches allocated once at
-    engine start (shape-stable -> serve_step compiles once).
-  * Admission: a free slot triggers a (B=1) prefill whose cache slices are
-    written into the slot (pure-functional tree update).
-  * Every tick runs one jitted serve_step for ALL slots; finished/empty
-    slots decode garbage into scratch space that is simply ignored --
-    the standard padding trade for static shapes.
-  * Retirement on EOS or max_new_tokens frees the slot for the queue.
+Two engines share the Request/tick/retire lifecycle:
 
-Split-KV flash decode (C2) makes the shared decode step efficient even when
-resident sequences have wildly different lengths: per-slot ``cache_len``
-masks exactly the valid cache prefix.
+  * :class:`ServingEngine` -- the fixed-slot baseline: ``max_batch``
+    contiguous cache slices of ``cache_size`` tokens each, reserved for a
+    request's worst case whether it uses them or not. Kept as the
+    benchmark baseline (benchmarks/serving_sweep.py measures it against
+    the paged engine at a matched HBM budget).
+  * :class:`PagedServingEngine` -- vLLM-style paged KV: HBM is a pool of
+    fixed-size pages (serving/kv_pool.py), each resident sequence holds
+    exactly ``ceil((L+1)/page_size)`` of them via an int32 block table,
+    and the decode kernel reads pages through the table
+    (kernels/flash_decode.flash_decode_paged_kernel). Throughput becomes
+    a function of tokens *resident*, not slots *reserved*.
+
+Both engines decode every tick with ONE jitted step whose shapes are
+engine-geometry-static, so requests join/leave with zero recompiles
+(pinned by compile-count tests).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +30,13 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.attention import AttentionConfig
-from repro.launch.steps import build_prefill_step, build_serve_step
+from repro.launch.steps import (
+    build_paged_admit_step,
+    build_paged_serve_step,
+    build_prefill_step,
+    build_serve_step,
+)
+from repro.serving.kv_pool import KVPagePool
 
 
 @dataclasses.dataclass
@@ -38,6 +47,15 @@ class Request:
     eos_id: Optional[int] = None
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+
+    @property
+    def feed(self) -> List[int]:
+        """Tokens whose KV must be (re)built at admission: the prompt plus
+        anything already generated -- nonempty ``generated`` means the
+        request was preempted mid-flight and is resuming (greedy decoding
+        makes the continuation deterministic, so resume == never-paused;
+        tests/test_paged.py pins it)."""
+        return self.prompt + self.generated
 
 
 _CACHE_BASE_NDIM = {"k": 4, "v": 4, "h": 3, "conv": 3}  # (B, ...) leaf ranks
@@ -169,6 +187,276 @@ class ServingEngine:
                 self._retire(slot)
 
     def run(self, max_ticks: int = 1000) -> Dict[int, Request]:
+        while (self.queue or any(s is not None for s in self.slots)) and self.ticks < max_ticks:
+            self.tick()
+        return self.finished
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+class PagedServingEngine:
+    """Continuous batching over a paged KV pool.
+
+    HBM holds ``num_pages`` physical pages of ``page_size`` tokens per
+    layer (``registry.paged_cache_specs``); a resident request owns
+    ``len // page_size + 1`` of them (one page of write headroom) through
+    its row of the int32 block table. Admission allocates, growth extends
+    one page at a time, retirement frees -- so a request's HBM footprint
+    tracks its *actual* length, and the engine admits by free *pages*, not
+    free worst-case slots.
+
+    Static shapes / compiles:
+      * decode: ONE jitted step, shapes fixed by
+        (max_batch, pages_per_seq_max, page_size). Zero recompiles on
+        join/leave/preempt (``decode_compiles`` stays 1; pinned by test).
+      * admission: one jitted batched prefill per (prompt bucket,
+        pow2 admission width) pair -- all same-bucket queued prompts
+        admitted in a single call, scattered into their pages on device.
+
+    OOM policy (DESIGN.md): admission is strict FIFO and reserves one
+    growth page per already-resident request; if decode-time growth still
+    finds the pool empty, the *youngest* resident request is preempted --
+    its pages freed, the request requeued at the queue FRONT with its
+    generated tokens kept, so re-admission re-prefills prompt+generated
+    and greedy decoding resumes exactly where it left off.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        attn_cfg: AttentionConfig,
+        *,
+        max_batch: int = 4,
+        num_pages: int = 64,
+        page_size: int = 16,
+        pages_per_seq_max: int = 16,
+        prompt_pad: int = 64,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.attn = attn_cfg
+        self.B = max_batch
+        self.ps = page_size
+        self.n_max = pages_per_seq_max
+        self.prompt_pad = prompt_pad
+        self.pool = KVPagePool(num_pages, page_size)
+        from repro.configs.registry import paged_cache_specs
+
+        spec = paged_cache_specs(cfg, num_pages, page_size)  # asserts attn-only
+        self.caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+        self._step = jax.jit(build_paged_serve_step(cfg, attn_cfg))
+        self._admit = jax.jit(build_paged_admit_step(cfg, attn_cfg, page_size))
+        # Host-side scheduler state, pushed to device every tick.
+        self.table = np.zeros((max_batch, pages_per_seq_max), np.int32)
+        self.cache_len = np.zeros((max_batch,), np.int32)
+        self.next_token = np.zeros((max_batch, 1), np.int32)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: List[Request] = []
+        self.finished: Dict[int, Request] = {}
+        self.ticks = 0
+        self.preemptions = 0
+        self._seq = 0  # admission order, for preempt-youngest
+        self._slot_seq = np.zeros((max_batch,), np.int64)
+
+    # ----------------------------------------------------------- metrics
+    @property
+    def decode_compiles(self) -> int:
+        return self._step._cache_size()
+
+    @property
+    def admit_compiles(self) -> int:
+        return self._admit._cache_size()
+
+    def stats(self) -> Dict[str, float]:
+        active = sum(s is not None for s in self.slots)
+        tokens = int(self.cache_len.sum())
+        usable = self.pool.usable_pages
+        return {
+            "active_slots": active,
+            "slot_utilization": active / self.B,
+            "used_pages": self.pool.used_pages,
+            "page_utilization": self.pool.page_utilization(),
+            # fraction of *allocated* page cells holding real KV
+            "page_fill": tokens / max(1, self.pool.used_pages * self.ps),
+            # fraction of the whole pool holding real KV
+            "token_occupancy": tokens / (usable * self.ps),
+        }
+
+    # ------------------------------------------------------------- admin
+    def _need_pages(self, tokens: int) -> int:
+        # +1: headroom so the next decode write always has a page.
+        return tokens // self.ps + 1
+
+    def submit(self, req: Request):
+        worst = len(req.prompt) + req.max_new_tokens
+        assert worst <= self.n_max * self.ps - 1, (
+            f"request {req.rid}: prompt+max_new ({worst}) exceeds per-seq "
+            f"capacity {self.n_max * self.ps - 1}"
+        )
+        assert self._need_pages(len(req.prompt)) <= self.pool.usable_pages, (
+            f"request {req.rid}: prompt alone overflows the pool"
+        )
+        self.queue.append(req)
+
+    def _bucket(self, L: int) -> int:
+        pad = -(-L // self.prompt_pad) * self.prompt_pad
+        return min(max(pad, self.prompt_pad), self.n_max * self.ps)
+
+    def _admit_tick(self):
+        """Strict-FIFO admission, then ONE batched prefill per bucket.
+
+        A request is admitted only if, after taking its pages, the pool
+        still holds one reserve page per resident request (including
+        requests picked earlier this tick) -- decode growth must not be
+        starved by admission. The first request that does not fit blocks
+        the rest (FIFO fairness: no small-prompt overtaking).
+        """
+        free_slots = [i for i, s in enumerate(self.slots) if s is None]
+        reserve = sum(s is not None for s in self.slots)
+        picks: List[Tuple[int, Request, List[int]]] = []
+        while self.queue and free_slots:
+            req = self.queue[0]
+            need = self._need_pages(len(req.feed))
+            if len(req.feed) > self._bucket(len(req.feed)):
+                # resumed request grew past the largest bucket: it cannot
+                # re-prefill; drop to finished as-is
+                self.queue.pop(0)
+                req.done = True
+                self.finished[req.rid] = req
+                continue
+            if self.pool.free_pages - need < reserve:
+                break
+            pages = self.pool.alloc(req.rid, need)
+            if pages is None:
+                break
+            self.queue.pop(0)
+            picks.append((free_slots.pop(0), req, pages))
+            reserve += 1
+        if not picks:
+            return
+        # Group by bucket; one batched admit call per bucket.
+        by_bucket: Dict[int, List[Tuple[int, Request, List[int]]]] = {}
+        for pick in picks:
+            by_bucket.setdefault(self._bucket(len(pick[1].feed)), []).append(pick)
+        for pad_to, group in sorted(by_bucket.items()):
+            W = min(_next_pow2(len(group)), self.B)
+            npb = -(-pad_to // self.ps)
+            inputs = np.zeros((W, pad_to), np.int32)
+            lens = np.ones((W,), np.int32)  # dummy rows: 1 token, null dest
+            dest = np.zeros((W, npb), np.int32)
+            for i, (slot, req, pages) in enumerate(group):
+                feed = req.feed
+                inputs[i, : len(feed)] = feed
+                lens[i] = len(feed)
+                n_dest = min(-(-len(feed) // self.ps), npb)
+                dest[i, :n_dest] = pages[:n_dest]
+            tok, lens_total, self.caches = self._admit(
+                self.params,
+                {"inputs": jnp.asarray(inputs), "lens": jnp.asarray(lens)},
+                self.caches,
+                jnp.asarray(dest),
+            )
+            tok_host = np.asarray(tok)
+            for i, (slot, req, pages) in enumerate(group):
+                self.table[slot] = 0
+                self.table[slot, : len(pages)] = pages
+                self.cache_len[slot] = int(lens_total[i])
+                t = int(tok_host[i, 0])
+                req.generated.append(t)
+                self.next_token[slot, 0] = t
+                self.slots[slot] = req
+                self._slot_seq[slot] = self._seq
+                self._seq += 1
+
+    def _clear_slot(self, slot: int):
+        self.slots[slot] = None
+        self.table[slot] = 0
+        self.cache_len[slot] = 0
+        self.next_token[slot, 0] = 0
+
+    def _retire(self, slot: int):
+        req = self.slots[slot]
+        assert req is not None
+        self.pool.free(req.rid)
+        req.done = True
+        self.finished[req.rid] = req
+        self._clear_slot(slot)
+
+    def _preempt_youngest(self) -> bool:
+        """Free the most recently admitted request's pages and requeue it
+        at the queue FRONT (it keeps FIFO priority and its generated
+        tokens; Request.feed makes re-admission a deterministic resume)."""
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if len(active) <= 1:
+            return False  # never preempt the last runner: no progress
+        victim = max(active, key=lambda i: self._slot_seq[i])
+        req = self.slots[victim]
+        self.pool.free(req.rid)
+        self.queue.insert(0, req)
+        self._clear_slot(victim)
+        self.preemptions += 1
+        return True
+
+    def _grow(self):
+        """Ensure every resident request owns a page for its next write;
+        extend from the pool, preempting the youngest on exhaustion.
+        Oldest-first so preemption cost lands on the least-progressed."""
+        order = sorted(
+            (i for i, s in enumerate(self.slots) if s is not None),
+            key=lambda i: self._slot_seq[i],
+        )
+        for slot in order:
+            req = self.slots[slot]
+            if req is None:  # preempted by an earlier iteration
+                continue
+            while self._need_pages(int(self.cache_len[slot])) > len(
+                self.pool.pages_of(req.rid)
+            ):
+                page = self.pool.extend(req.rid)
+                if page is None:
+                    if not self._preempt_youngest():
+                        raise RuntimeError(
+                            "page pool exhausted with a single resident "
+                            "request; pool too small for this workload"
+                        )
+                    if self.slots[slot] is None:
+                        break  # we preempted ourselves
+                    continue
+                self.table[slot, len(self.pool.pages_of(req.rid)) - 1] = page
+
+    # -------------------------------------------------------------- tick
+    def tick(self):
+        self._admit_tick()
+        if not any(s is not None for s in self.slots):
+            return
+        tok, self.caches = self._step(
+            self.params,
+            jnp.asarray(self.next_token),
+            self.caches,
+            jnp.asarray(self.table),
+            jnp.asarray(self.cache_len),
+        )
+        tok_host = np.asarray(tok)
+        self.ticks += 1
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.cache_len[slot] += 1
+            t = int(tok_host[slot, 0])
+            req.generated.append(t)
+            self.next_token[slot, 0] = t
+            if (
+                (req.eos_id is not None and t == req.eos_id)
+                or len(req.generated) >= req.max_new_tokens + 1
+                or int(self.cache_len[slot]) >= self.n_max * self.ps - 1
+            ):
+                self._retire(slot)
+        self._grow()
+
+    def run(self, max_ticks: int = 10000) -> Dict[int, Request]:
         while (self.queue or any(s is not None for s in self.slots)) and self.ticks < max_ticks:
             self.tick()
         return self.finished

@@ -1,0 +1,290 @@
+"""Paged-KV serving: page pool, block-table indirect decode kernel
+(bitwise vs contiguous), and the paged continuous-batching engine
+(token parity under join/leave/preemption, zero decode recompiles,
+batched single-compile admission)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.attention import AttentionConfig
+from repro.core.decode import flash_decode_paged
+from repro.kernels.ops import flash_decode_pallas, flash_decode_paged_pallas
+from repro.models import lm
+from repro.serving.engine import PagedServingEngine, Request, ServingEngine
+from repro.serving.kv_pool import NULL_PAGE, KVPagePool
+
+# ---------------------------------------------------------------------------
+# Pool
+# ---------------------------------------------------------------------------
+
+
+def test_pool_alloc_free_roundtrip():
+    pool = KVPagePool(num_pages=8, page_size=16)
+    assert pool.usable_pages == 7 and pool.free_pages == 7
+    a = pool.alloc(1, 3)
+    assert len(a) == 3 and NULL_PAGE not in a and len(set(a)) == 3
+    assert pool.used_pages == 3 and pool.pages_of(1) == a
+    b = pool.alloc(2, 4)
+    assert set(a).isdisjoint(b) and pool.free_pages == 0
+    assert pool.free(1) == 3 and pool.free_pages == 3
+    assert pool.pages_of(1) == []
+    assert pool.free(2) == 4 and pool.free_pages == 7
+
+
+def test_pool_alloc_all_or_nothing():
+    pool = KVPagePool(num_pages=4, page_size=8)
+    assert pool.alloc(1, 5) is None  # over capacity: no partial grant
+    assert pool.free_pages == 3 and pool.pages_of(1) == []
+    assert pool.alloc(1, 3) is not None
+    assert pool.alloc(2, 1) is None  # empty pool
+
+
+def test_pool_extend_and_oom():
+    pool = KVPagePool(num_pages=4, page_size=8)
+    first = pool.alloc(7, 2)
+    p = pool.extend(7)
+    assert p is not None and pool.pages_of(7) == first + [p]
+    assert pool.extend(7) is None  # OOM signals the engine to preempt
+    assert pool.page_utilization() == 1.0
+
+
+def test_pool_pages_for_tokens():
+    pool = KVPagePool(num_pages=4, page_size=16)
+    assert pool.pages_for_tokens(1) == 1
+    assert pool.pages_for_tokens(16) == 1
+    assert pool.pages_for_tokens(17) == 2
+
+
+# ---------------------------------------------------------------------------
+# Kernel: page-indirect decode vs contiguous
+# ---------------------------------------------------------------------------
+
+B, S, PS, Hq, Hk, D = 3, 128, 16, 8, 2, 64
+NPAGES = S // PS
+
+
+def _paginate(kc, vc, seed=0):
+    """Contiguous (B,S,Hk,D) caches -> shuffled physical page planes
+    (Hk,P,ps,D) + block table, page 0 reserved null."""
+    kc, vc = np.asarray(kc), np.asarray(vc)
+    P = B * NPAGES + 1
+    perm = np.random.default_rng(seed).permutation(P - 1) + 1
+    table = perm.reshape(B, NPAGES).astype(np.int32)
+    k_pages = np.zeros((Hk, P, PS, D), kc.dtype)
+    v_pages = np.zeros((Hk, P, PS, D), vc.dtype)
+    for b in range(B):
+        for i in range(NPAGES):
+            phys = table[b, i]
+            k_pages[:, phys] = kc[b, i * PS : (i + 1) * PS].transpose(1, 0, 2)
+            v_pages[:, phys] = vc[b, i * PS : (i + 1) * PS].transpose(1, 0, 2)
+    return jnp.asarray(k_pages), jnp.asarray(v_pages), jnp.asarray(table)
+
+
+@pytest.fixture(scope="module")
+def kv():
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    kc = jax.random.normal(ks[0], (B, S, Hk, D))
+    vc = jax.random.normal(ks[1], (B, S, Hk, D))
+    q = jax.random.normal(ks[2], (B, 1, Hq, D))
+    lens = jnp.array([128, 97, 37], jnp.int32)  # full / prime / odd-page
+    return q, kc, vc, lens
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_paged_bitwise_parity_one_page_per_split(kv, dtype):
+    """One split == one page makes the paged kernel's per-split math and
+    merge tree identical to the contiguous kernel's -> (o, lse) must be
+    BITWISE equal, independent of physical page placement. GQA (Hq=8 over
+    Hk=2) and ragged prime/odd lengths included."""
+    q, kc, vc = (t.astype(dtype) for t in kv[:3])
+    lens = kv[3]
+    k_pages, v_pages, table = _paginate(kc, vc)
+    o_c, lse_c = flash_decode_pallas(q, kc, vc, lens, num_splits=NPAGES)
+    o_p, lse_p = flash_decode_paged_pallas(
+        q, k_pages, v_pages, lens, table, num_splits=NPAGES
+    )
+    np.testing.assert_array_equal(np.asarray(o_p), np.asarray(o_c))
+    np.testing.assert_array_equal(np.asarray(lse_p), np.asarray(lse_c))
+
+
+def test_paged_multi_page_splits_match(kv):
+    """pp > 1 (several pages walked sequentially per split) changes the
+    reduction order, so parity is allclose, not bitwise."""
+    q, kc, vc, lens = kv
+    k_pages, v_pages, table = _paginate(kc, vc)
+    o_c, lse_c = flash_decode_pallas(q, kc, vc, lens, num_splits=NPAGES)
+    for splits in (1, 2, 4):
+        o_p, lse_p = flash_decode_paged_pallas(
+            q, k_pages, v_pages, lens, table, num_splits=splits
+        )
+        np.testing.assert_allclose(o_p, o_c, atol=5e-6, rtol=1e-5)
+        np.testing.assert_allclose(lse_p, lse_c, atol=1e-5, rtol=1e-5)
+
+
+def test_paged_shuffle_invariance(kv):
+    """The physical placement of pages is pure bookkeeping: two different
+    shuffles must produce BITWISE identical results."""
+    q, kc, vc, lens = kv
+    outs = []
+    for seed in (0, 1):
+        k_pages, v_pages, table = _paginate(kc, vc, seed=seed)
+        outs.append(
+            flash_decode_paged_pallas(
+                q, k_pages, v_pages, lens, table, num_splits=4
+            )
+        )
+    np.testing.assert_array_equal(np.asarray(outs[0][0]), np.asarray(outs[1][0]))
+    np.testing.assert_array_equal(np.asarray(outs[0][1]), np.asarray(outs[1][1]))
+
+
+def test_paged_window_sink_bitwise(kv):
+    q, kc, vc, lens = kv
+    k_pages, v_pages, table = _paginate(kc, vc)
+    o_c, lse_c = flash_decode_pallas(
+        q, kc, vc, lens, window=32, sink=8, num_splits=NPAGES
+    )
+    o_p, lse_p = flash_decode_paged_pallas(
+        q, k_pages, v_pages, lens, table, window=32, sink=8, num_splits=NPAGES
+    )
+    np.testing.assert_array_equal(np.asarray(o_p), np.asarray(o_c))
+    np.testing.assert_array_equal(np.asarray(lse_p), np.asarray(lse_c))
+
+
+def test_paged_xla_fallback_matches(kv):
+    q, kc, vc, lens = kv
+    k_pages, v_pages, table = _paginate(kc, vc)
+    o_p, lse_p = flash_decode_paged_pallas(
+        q, k_pages, v_pages, lens, table, num_splits=4
+    )
+    o_x, lse_x = flash_decode_paged(
+        q, k_pages, v_pages, lens, table, num_splits=4
+    )
+    np.testing.assert_allclose(o_p, o_x, atol=5e-6, rtol=1e-5)
+    np.testing.assert_allclose(lse_p, lse_x, atol=1e-5, rtol=1e-5)
+
+
+def test_paged_empty_slot_masked(kv):
+    """ISSUE 7 satellite: a free/finished slot (length 0, all-null table
+    row) must read no KV: its pages are never active, so o == 0 and
+    lse == -inf, regardless of what garbage sits in the null page."""
+    q, kc, vc, _ = kv
+    k_pages, v_pages, table = _paginate(kc, vc)
+    # poison the null page: masked-out reads would show up immediately
+    k_pages = k_pages.at[:, 0].set(1e9)
+    v_pages = v_pages.at[:, 0].set(1e9)
+    lens = jnp.array([128, 0, 37], jnp.int32)
+    table = table.at[1].set(0)
+    o, lse = flash_decode_paged_pallas(
+        q, k_pages, v_pages, lens, table, num_splits=4
+    )
+    assert np.all(np.asarray(o[1]) == 0.0)
+    assert np.all(np.isneginf(np.asarray(lse[1])))
+    # live rows unaffected by the poisoned null page
+    o_ref, _ = flash_decode_paged(
+        q, k_pages, v_pages, lens, table, num_splits=4
+    )
+    np.testing.assert_allclose(o[0], o_ref[0], atol=5e-6, rtol=1e-5)
+    np.testing.assert_allclose(o[2], o_ref[2], atol=5e-6, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+ATTN = AttentionConfig(impl="flash_xla", block_q=64, block_kv=64, decode_splits=2)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = registry.reduce_config(registry.get("qwen3-8b"))
+    params = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _sequential_refs(cfg, params, prompts, max_new):
+    """Oracle: each request alone through the fixed-slot engine."""
+    refs = {}
+    for i, p in enumerate(prompts):
+        solo = ServingEngine(cfg, params, ATTN, max_batch=1, cache_size=64,
+                             prompt_pad=16)
+        solo.submit(Request(rid=i, prompt=list(p), max_new_tokens=max_new))
+        refs[i] = solo.run(max_ticks=200)[i].generated
+    return refs
+
+
+def test_paged_engine_token_parity_and_compiles(model):
+    """Requests joining and leaving mid-flight through the paged engine
+    generate exactly the sequential-oracle tokens; the decode step compiles
+    ONCE for the whole run and admission compiles once per (bucket, width)."""
+    cfg, params = model
+    rng = np.random.default_rng(0)
+    prompts = [list(map(int, rng.integers(1, 100, rng.integers(2, 20))))
+               for _ in range(5)]
+    refs = _sequential_refs(cfg, params, prompts, max_new=6)
+    eng = PagedServingEngine(cfg, params, ATTN, max_batch=2, num_pages=17,
+                             page_size=8, pages_per_seq_max=8, prompt_pad=16)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=list(p), max_new_tokens=6))
+    done = eng.run(max_ticks=400)
+    assert sorted(done) == list(range(5))
+    for i in range(5):
+        assert done[i].generated == refs[i], i
+    assert eng.decode_compiles == 1  # zero recompiles across join/leave
+    # 5 prompts, 2 buckets (pad 16 / 32), widths bounded by max_batch=2:
+    # a handful of admit traces, never one per request
+    assert eng.admit_compiles <= 4
+    # free-on-retire returned every page
+    assert eng.pool.used_pages == 0
+    assert eng.pool.free_pages == eng.pool.usable_pages
+
+
+def test_paged_engine_batched_admission_one_compile(model):
+    """All same-bucket queued prompts are admitted in ONE batched prefill:
+    3 different same-bucket lengths into an empty 4-slot engine -> exactly
+    one admit trace, and slot reuse later sticks to it."""
+    cfg, params = model
+    eng = PagedServingEngine(cfg, params, ATTN, max_batch=4, num_pages=33,
+                             page_size=8, pages_per_seq_max=8, prompt_pad=16)
+    for i, L in enumerate((3, 7, 11)):
+        eng.submit(Request(rid=i, prompt=[2 + i] * L, max_new_tokens=4))
+    eng.tick()  # admits all three in one call (width padded to 4)
+    assert eng.admit_compiles == 1
+    for i, L in enumerate((5, 9, 13)):
+        eng.submit(Request(rid=10 + i, prompt=[1 + i] * L, max_new_tokens=4))
+    done = eng.run(max_ticks=200)
+    assert sorted(done) == [0, 1, 2, 10, 11, 12]
+    # one bucket, pow2 widths only: at most 1 + log2(max_batch) traces ever,
+    # however requests trickle in (here widths 4, then 1/2 as slots free)
+    assert eng.admit_compiles <= 3
+    assert eng.decode_compiles == 1
+
+
+def test_paged_engine_preemption_resume(model):
+    """A pool too small for concurrent growth forces preempt-youngest;
+    requeued requests resume (prompt+generated re-prefill) and still
+    produce exactly the oracle tokens."""
+    cfg, params = model
+    rng = np.random.default_rng(3)
+    prompts = [list(map(int, rng.integers(1, 100, 6))) for _ in range(4)]
+    refs = _sequential_refs(cfg, params, prompts, max_new=24)
+    eng = PagedServingEngine(cfg, params, ATTN, max_batch=4, num_pages=14,
+                             page_size=4, pages_per_seq_max=8, prompt_pad=16)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=list(p), max_new_tokens=24))
+    done = eng.run(max_ticks=1000)
+    assert sorted(done) == list(range(4))
+    for i in range(4):
+        assert done[i].generated == refs[i], i
+    assert eng.preemptions > 0, "pool was sized to force preemption"
+    assert eng.decode_compiles == 1  # preemption churn never recompiles
+
+
+def test_paged_engine_rejects_oversized(model):
+    cfg, params = model
+    eng = PagedServingEngine(cfg, params, ATTN, max_batch=2, num_pages=9,
+                             page_size=8, pages_per_seq_max=4)
+    with pytest.raises(AssertionError):
+        eng.submit(Request(rid=0, prompt=[1] * 20, max_new_tokens=20))
