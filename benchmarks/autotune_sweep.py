@@ -94,12 +94,12 @@ def _rows_for(csv: List[str], meta: dict, entry: dict) -> None:
         relevant = (lambda kn: {k: v for k, v in kn.items() if k != "bwd"}
                     ) if bench.endswith("_fwd") else (lambda kn: kn)
         if relevant(knobs["tuned"]) == relevant(knobs["heuristic"]):
-            t = interleaved_timeit({"both": make("tuned")}, q, k, v,
-                                   iters=3)["both"]
-            best = {"tuned": t, "heuristic": t}
+            timed = interleaved_timeit({"both": make("tuned")}, q, k, v,
+                                       iters=3)
+            best = {"tuned": timed["both"], "heuristic": timed["both"]}
             note = "identical-knobs;"
         else:
-            best = interleaved_timeit(
+            timed = best = interleaved_timeit(
                 {mode: make(mode) for mode in ("tuned", "heuristic")},
                 q, k, v, iters=3,
             )
@@ -107,7 +107,7 @@ def _rows_for(csv: List[str], meta: dict, entry: dict) -> None:
         for mode in ("tuned", "heuristic"):
             csv.append(
                 f"{bench}/{mode}/{tag},{best[mode]*1e6:.0f},"
-                f"{note}{_fmt(knobs[mode])}"
+                f"{note}{_fmt(knobs[mode])};timing={timed.provenance}"
             )
         assert best["tuned"] <= best["heuristic"] * NOISE_TOL, (
             "tuned knobs lost to the heuristic -- stale tuned.json? "

@@ -75,9 +75,11 @@ def _time_pair(
     t_f, t_b = best["fwd"], best["fwdbwd"]
     csv.append(
         f"{names[0]},{t_f*1e6:.0f},{_flops(seq, batch, causal, False)/t_f/1e12:.4f} TFLOP/s"
+        f";timing={best.provenance}"
     )
     csv.append(
         f"{names[1]},{t_b*1e6:.0f},{_flops(seq, batch, causal, True)/t_b/1e12:.4f} TFLOP/s"
+        f";timing={best.provenance}"
     )
 
 
@@ -184,6 +186,7 @@ def bwd_comparison(csv: List[str], key=None) -> None:
         csv.append(
             f"bwd_cmp_fwdbwd/{tag},{best[bwd]*1e6:.0f},"
             f"{_flops(seq, batch, True, True)/best[bwd]/1e12:.4f} TFLOP/s"
+            f";timing={best.provenance}"
         )
     assert best["fused"] < best["split"], (
         "fused backward must beat the split baseline", best,

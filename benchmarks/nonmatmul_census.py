@@ -100,6 +100,7 @@ def run(csv: List[str]) -> None:
         csv.append(
             f"c1_census/{name},{best[name]*1e6:.0f},"
             f"transc={c['transcendentals']:.3e};div={c['divides']:.3e};matmul={c['flops']:.3e}"
+            f";timing={best.provenance}"
         )
 
     bwd_exp_census(csv)
@@ -157,6 +158,7 @@ def bwd_exp_census(csv: List[str]) -> None:
             f"nonmatmul_bwd/{name},{best[name]*1e6:.0f},"
             f"exp_elems={c['transcendentals']:.3e};exp_per_tile="
             f"{c['transcendentals'] / one_exp_per_tile:.2f};matmul={c['flops']:.3e}"
+            f";timing={best.provenance}"
         )
     assert counts["fused"] == one_exp_per_tile, (
         "fused bwd must run exactly one exp per visible tile",

@@ -138,6 +138,7 @@ def fwd_timing(csv: List[str]) -> None:
             csv.append(
                 f"occupancy_fwd/B={B}/H={H}/seq={seq}/{name},"
                 f"{best[name]*1e6:.0f},bands={nb if name == 'banded' else 1}"
+                f";timing={best.provenance}"
             )
 
 

@@ -51,6 +51,11 @@ Durability rules (the committed trajectory must survive bad runs):
   * ``--prune-stale`` drops kept rows belonging to a *bench this run
     re-measured* whose (bench, config) was not emitted again — i.e. rows
     stranded by a config rename. Benches that did not run are never pruned.
+  * every merged row (kept + fresh) passes a required-key schema check
+    (``bench``/``config`` identity plus a units field: numeric
+    ``us_per_call`` or non-empty ``derived``); nonconforming rows are
+    warned about and tagged ``"schema": "nonconforming: ..."`` instead of
+    silently mixing into the committed trajectory.
 """
 
 from __future__ import annotations
@@ -115,8 +120,48 @@ def _load_existing(json_path: str):
     return list(deduped.values())
 
 
+# Required ledger-row schema, enforced at merge time: identity keys plus
+# the units-bearing fields. Every bench module emits heterogeneous derived
+# payloads, but a row missing its identity or carrying NO measurement at
+# all (neither a us_per_call number nor a derived string) used to mix
+# silently into the committed BENCH_*.json; now it is warned about and
+# tagged so downstream readers can filter it.
+REQUIRED_ROW_KEYS = ("bench", "config", "us_per_call", "derived")
+
+
+def _check_schema(rows):
+    """Warn-and-tag nonconforming ledger rows (never drop, never crash).
+
+    A conforming row has all of ``REQUIRED_ROW_KEYS``, a non-empty
+    ``bench`` name, and at least one units field filled in: a numeric
+    ``us_per_call`` or a non-empty ``derived`` payload. Violations get a
+    ``"schema": "nonconforming: <reason>"`` tag and a stderr warning.
+    """
+    bad = 0
+    for r in rows:
+        reason = None
+        missing = [k for k in REQUIRED_ROW_KEYS if k not in r]
+        if missing:
+            reason = f"missing keys {missing}"
+        elif not isinstance(r["bench"], str) or not r["bench"]:
+            reason = "empty bench name"
+        elif (not isinstance(r["us_per_call"], (int, float))
+              and not (isinstance(r.get("derived"), str) and r["derived"])):
+            reason = "no units field (neither us_per_call nor derived)"
+        if reason is not None:
+            r["schema"] = f"nonconforming: {reason}"
+            bad += 1
+        else:
+            r.pop("schema", None)  # row was fixed since it was tagged
+    if bad:
+        print(f"# WARNING: {bad} ledger rows are nonconforming; tagged with "
+              f"a 'schema' field instead of mixing silently", file=sys.stderr)
+    return rows
+
+
 def _merge_trajectory(json_path, records, prune_stale):
-    """Merge fresh records into the committed trajectory at json_path."""
+    """Merge fresh records into the committed trajectory at json_path.
+    All rows (kept + fresh) pass the required-key schema check first."""
     fresh = {(r["bench"], r["config"]) for r in records}
     fresh_benches = {b for b, _ in fresh}
     kept = [r for r in _load_existing(json_path)
@@ -127,7 +172,7 @@ def _merge_trajectory(json_path, records, prune_stale):
             print(f"# --prune-stale: dropping {len(stale)} stale rows of "
                   f"re-measured benches", file=sys.stderr)
         kept = [r for r in kept if r["bench"] not in fresh_benches]
-    records = kept + records
+    records = _check_schema(kept + records)
     with open(json_path, "w") as f:
         json.dump(records, f, indent=1)
     print(f"# wrote {json_path} ({len(records)} rows)", file=sys.stderr)

@@ -112,18 +112,11 @@ def _drive(engine, trace, base_rid: int):
         t0 = time.perf_counter()
         engine.tick()
         dt = time.perf_counter() - t0
-        live = [int(l) for l in np.asarray(engine.cache_len) if int(l) > 0]
-        toks = len(live)
-        if isinstance(engine, PagedServingEngine):
-            # cells the paged kernel touches: live pages only
-            cells = sum(-(-l // engine.ps) * engine.ps for l in live)
-        else:
-            # the fixed decode walks every slot's full slice
-            cells = engine.B * engine.cache_size
-        cap = (engine.pool.usable_pages * engine.ps
-               if isinstance(engine, PagedServingEngine)
-               else engine.B * engine.cache_size)
-        samples.append((dt, toks, cells, cap))
+        # Common engine interface (ISSUE 8 satellite): both engines expose
+        # the cells their decode touches (paged: live pages only; fixed:
+        # every slot's full slice) -- no isinstance special-casing.
+        toks = sum(1 for l in np.asarray(engine.cache_len) if int(l) > 0)
+        samples.append((dt, toks, engine.active_kv_cells(), engine.kv_capacity()))
     return samples
 
 
@@ -166,21 +159,29 @@ def run(csv: List[str]) -> None:
     pg = _summarize(_drive(paged, trace, base_rid=1_000))
 
     assert len(fixed.finished) == 2 * n_req and len(paged.finished) == 2 * n_req
+    # decode_compiles is now COMMON interface (ISSUE 8): pin both engines
     assert paged.decode_compiles == 1, (
         f"paged decode recompiled: {paged.decode_compiles} traces"
     )
+    assert fixed.decode_compiles == 1, (
+        f"fixed decode recompiled: {fixed.decode_compiles} traces"
+    )
+    fx_snap, pg_snap = fixed.snapshot(), paged.snapshot()
 
     csv.append(
         f"serving_fixed/b{BF}_cache{CACHE},{fx['us_per_tok']:.1f},"
         f"tok_s={fx['tok_per_s']:.1f};p50_ms={fx['p50_ms']:.1f};"
         f"p95_ms={fx['p95_ms']:.1f};ticks={fx['ticks']};tokens={fx['tokens']};"
-        f"slot_occupancy={fx['occupancy']:.3f}"
+        f"slot_occupancy={fx['occupancy']:.3f};"
+        f"decode_mfu={fx_snap['decode/mfu']:.2e};"
+        f"decode_compiles={fixed.decode_compiles}"
     )
     csv.append(
         f"serving_paged/b{BP}_ps{PS}x{NUM_PAGES},{pg['us_per_tok']:.1f},"
         f"tok_s={pg['tok_per_s']:.1f};p50_ms={pg['p50_ms']:.1f};"
         f"p95_ms={pg['p95_ms']:.1f};ticks={pg['ticks']};tokens={pg['tokens']};"
         f"page_occupancy={pg['occupancy']:.3f};"
+        f"decode_mfu={pg_snap['decode/mfu']:.2e};"
         f"preemptions={paged.preemptions};decode_compiles={paged.decode_compiles}"
     )
 

@@ -80,4 +80,5 @@ def run(csv: List[str]) -> None:
             csv.append(
                 f"table1_e2e/{impl}/seq={seq},{t*1e6:.0f},"
                 f"tok_per_s={toks/t:.0f};model_gflops_per_s={mflops/t/1e9:.2f}"
+                f";timing={best.provenance}"
             )

@@ -11,6 +11,11 @@ fixed before any timing could be trusted.
 
 from __future__ import annotations
 
-from repro.utils.timing import DEFAULT_ITERS, interleaved_timeit, time_min
+from repro.utils.timing import (
+    DEFAULT_ITERS,
+    TimingResult,
+    interleaved_timeit,
+    time_min,
+)
 
-__all__ = ["DEFAULT_ITERS", "interleaved_timeit", "time_min"]
+__all__ = ["DEFAULT_ITERS", "TimingResult", "interleaved_timeit", "time_min"]

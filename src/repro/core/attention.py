@@ -158,6 +158,10 @@ def decode_attention(
             k_cache.shape[1], q.shape[2], q.shape[3], q.dtype,
             use_tuned=cfg.use_tuned,
         )
+    else:
+        from repro.obs.metrics import count_knob
+
+        count_knob("flash_decode", "explicit")
     if cfg.impl == "flash_pallas":
         from repro.kernels.ops import flash_decode_pallas
 
@@ -203,6 +207,10 @@ def decode_attention_paged(
             logical, q.shape[2], q.shape[3], q.dtype,
             page_size=ps, use_tuned=cfg.use_tuned,
         )
+    else:
+        from repro.obs.metrics import count_knob
+
+        count_knob(f"flash_decode_paged{ps}", "explicit")
     if cfg.impl == "flash_pallas":
         from repro.kernels.ops import flash_decode_paged_pallas
 

@@ -284,11 +284,15 @@ def resolve_decode_splits(seq: int, heads: int, head_dim: int, dtype, *,
     (``flash_decode_paged<ps>``, ``seq`` = the *logical* capacity
     ``n_pages * page_size``) so the serving engine's page-indirect step
     consults its own tuned entries rather than the contiguous cache's."""
-    if not cache_enabled(use_tuned):
-        return default
+    from repro.obs.metrics import count_knob
+
     impl = ("flash_decode" if page_size is None
             else f"flash_decode_paged{int(page_size)}")
+    if not cache_enabled(use_tuned):
+        count_knob(impl, "heuristic")
+        return default
     tuned = lookup(impl, True, seq, heads, head_dim, dtype)
+    count_knob(impl, "tuned" if "num_splits" in tuned else "heuristic")
     return int(tuned.get("num_splits", default))
 
 

@@ -289,11 +289,46 @@ def resolve_pallas_knobs(cfg: PallasFlashConfig, q_shape, k_shape,
     nb, ks = _resolve_partitions(
         cfg, tuned, schedule, B * Hq, Sqp // bq, Skp // bk
     )
+    _count_knob_sources(cfg, tuned, schedule)
     return dict(
         block_q=bq, block_kv=bk, schedule=schedule,
         bwd=_resolve_bwd(bwd, Hq // Hk, Sqp),
         num_q_bands=nb, kv_splits=ks, tuned=dict(tuned),
     )
+
+
+def _count_knob_sources(cfg: PallasFlashConfig, tuned: dict, schedule: str):
+    """Telemetry: which precedence tier supplied each knob of this call.
+
+    Increments ``knobs/flash_pallas/{explicit,tuned,heuristic}`` on the
+    process-wide default registry (repro.obs.metrics) -- one hit per knob,
+    so a call resolving block_q explicitly but everything else from the
+    cache counts 1 explicit + N tuned. Runs at *trace* time (resolution
+    happens once per jit trace); cached executions do not re-count, the
+    same way they do not re-compile.
+    """
+    from repro.obs.metrics import count_knob
+
+    per_source = {"explicit": 0, "tuned": 0, "heuristic": 0}
+
+    def classify(explicit: bool, tuned_key: str):
+        if explicit:
+            per_source["explicit"] += 1
+        elif tuned_key in tuned:
+            per_source["tuned"] += 1
+        else:
+            per_source["heuristic"] += 1
+
+    classify(cfg.block_q is not None, "block_q")
+    classify(cfg.block_kv is not None, "block_kv")
+    classify(cfg.schedule is not None, "schedule")
+    classify(cfg.bwd is not None, "bwd")
+    if schedule != "dense":  # dense forces 1/1: no partition knobs in play
+        classify(cfg.num_q_bands is not None, "num_q_bands")
+        classify(cfg.kv_splits is not None, "kv_splits")
+    for source, n in per_source.items():
+        if n:
+            count_knob("flash_pallas", source, n)
 
 
 def _heads_layout(x: jnp.ndarray) -> jnp.ndarray:

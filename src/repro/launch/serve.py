@@ -6,10 +6,22 @@ Usage:
   python -m repro.launch.serve --arch hymba-1.5b --reduce --ckpt-dir /ck
   python -m repro.launch.serve --arch qwen3-8b --reduce --engine paged \
       --num-pages 128 --page-size 16
+  python -m repro.launch.serve --arch qwen3-8b --reduce --engine paged \
+      --arrival-rate 1.0 --trace-out trace.json --metrics-out metrics.json
 
 ``--engine fixed`` (default) reserves a worst-case contiguous cache slice
 per slot; ``--engine paged`` serves from a shared page pool with
 block-table indirect flash decode (attention-only archs).
+
+Observability (repro.obs): every run collects the unified metrics
+registry (printed as the ``metrics`` block of the JSON summary, written
+to ``--metrics-out``); ``--trace-out PATH`` additionally records the
+request lifecycle (submit -> queue_wait -> prefill -> per-tick decode ->
+retire, plus preempt/resume) as Chrome/Perfetto ``trace_event`` JSON --
+load the file at https://ui.perfetto.dev for a tick-by-tick timeline.
+``--arrival-rate R`` replays a Poisson arrival process (R requests per
+expected tick) instead of submitting everything upfront, so queue-wait
+spans reflect admission pressure rather than a thundering herd.
 """
 
 from __future__ import annotations
@@ -25,7 +37,36 @@ from repro.checkpoint.store import CheckpointStore
 from repro.configs import registry
 from repro.core.attention import AttentionConfig
 from repro.models import lm
+from repro.obs import MetricsRegistry, TraceRecorder, default_registry
 from repro.serving.engine import PagedServingEngine, Request, ServingEngine
+
+
+def _drive_poisson(engine, requests, rate: float, seed: int,
+                   max_ticks: int) -> None:
+    """Submit ``requests`` on a Poisson schedule (in engine ticks) while
+    ticking; an idle engine fast-forwards to the next arrival."""
+    rng = np.random.default_rng(seed)
+    arrivals = []
+    tick = 0
+    for req in requests:
+        tick += int(rng.poisson(1.0 / rate))
+        arrivals.append((tick, req))
+    it = iter(arrivals)
+    pending = next(it, None)
+    while engine.ticks < max_ticks:
+        while pending is not None and pending[0] <= engine.ticks:
+            engine.submit(pending[1])
+            pending = next(it, None)
+        idle = not engine.queue and not any(
+            s is not None for s in engine.slots
+        )
+        if idle:
+            if pending is None:
+                break
+            engine.submit(pending[1])  # fast-forward to the next arrival
+            pending = next(it, None)
+            continue
+        engine.tick()
 
 
 def main():
@@ -46,6 +87,13 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--pages-per-seq", type=int, default=None,
                     help="paged: block-table width; default cache/page_size")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="Poisson arrivals (requests per expected tick); "
+                         "default submits every request upfront")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the request-lifecycle Perfetto trace here")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the final metrics snapshot (JSON) here")
     args = ap.parse_args()
 
     cfg = registry.get(args.arch)
@@ -62,6 +110,8 @@ def main():
     # Knobs left at None so prefill block sizes and the decode split fan-out
     # resolve from the committed tuned cache (kernels/autotune) per shape.
     attn_cfg = AttentionConfig(impl=args.attn)
+    obs_registry = MetricsRegistry()
+    tracer = TraceRecorder(process=f"serve:{args.engine}") if args.trace_out else None
     if args.engine == "paged":
         num_pages = args.num_pages or (
             args.max_batch * args.cache // args.page_size + 1
@@ -70,30 +120,56 @@ def main():
         engine = PagedServingEngine(
             cfg, params, attn_cfg, max_batch=args.max_batch,
             num_pages=num_pages, page_size=args.page_size,
-            pages_per_seq_max=n_max,
+            pages_per_seq_max=n_max, registry=obs_registry, tracer=tracer,
         )
     else:
         engine = ServingEngine(cfg, params, attn_cfg, max_batch=args.max_batch,
-                               cache_size=args.cache)
+                               cache_size=args.cache,
+                               registry=obs_registry, tracer=tracer)
     rng = np.random.default_rng(args.seed)
-    for rid in range(args.requests):
-        prompt = rng.integers(1, min(cfg.vocab_size, 1000),
-                              size=int(rng.integers(2, 12))).tolist()
-        engine.submit(Request(rid=rid, prompt=prompt, max_new_tokens=args.max_new))
+    requests = [
+        Request(rid=rid,
+                prompt=rng.integers(1, min(cfg.vocab_size, 1000),
+                                    size=int(rng.integers(2, 12))).tolist(),
+                max_new_tokens=args.max_new)
+        for rid in range(args.requests)
+    ]
 
     t0 = time.perf_counter()
-    finished = engine.run(max_ticks=10_000)
+    if args.arrival_rate:
+        _drive_poisson(engine, requests, args.arrival_rate, args.seed,
+                       max_ticks=10_000)
+    else:
+        for req in requests:
+            engine.submit(req)
+        engine.run(max_ticks=10_000)
     dt = time.perf_counter() - t0
+    finished = engine.finished
     toks = sum(len(r.generated) for r in finished.values())
+    snap = engine.snapshot()
+    # the kernel knob-source counters live on the process-wide default
+    # registry (they increment deep inside tracing); fold them in so the
+    # exported snapshot answers "which tier did that kernel launch with"
+    snap.update(default_registry().snapshot())
     summary = {
         "engine": args.engine, "requests": len(finished),
         "ticks": engine.ticks, "generated_tokens": toks,
         "tok_per_s": round(toks / dt, 1),
+        "decode_compiles": engine.decode_compiles,
+        "decode_mfu": snap["decode/mfu"],
+        "decode_tok_per_s": round(snap["decode/tokens_per_s"], 1),
     }
     if args.engine == "paged":
-        summary["decode_compiles"] = engine.decode_compiles
         summary["preemptions"] = engine.preemptions
     print(json.dumps(summary))
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+        print(f"[serve] wrote metrics snapshot to {args.metrics_out}")
+    if tracer is not None:
+        tracer.save(args.trace_out)
+        print(f"[serve] wrote Perfetto trace ({len(tracer.events)} events) "
+              f"to {args.trace_out}")
     for rid in sorted(finished)[:4]:
         print(f"  req {rid}: {finished[rid].generated}")
 

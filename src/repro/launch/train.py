@@ -72,6 +72,12 @@ class TrainLoopConfig:
     # (KV-sharded context parallel -- distributed/ring_attention.py).
     model_axis: int = 1
     attn_sharding: Optional[str] = None
+    # Observability (repro.obs): metrics always collect into `registry`
+    # (or a fresh one); trace_out records step -> data/compute/checkpoint
+    # spans as Perfetto JSON. Both host-side: zero extra compiles.
+    trace_out: Optional[str] = None
+    metrics_out: Optional[str] = None
+    registry: Optional[Any] = None
 
 
 def resolve_model(arch: Optional[str], preset: Optional[str], reduce: bool) -> ModelConfig:
@@ -143,40 +149,86 @@ def _train(cfg: ModelConfig, loop: TrainLoopConfig, opt_cfg: Optional[AdamWConfi
     monitor = StepMonitor()
     cadence = CheckpointCadence(loop.mtbf_seconds, min_interval_steps=loop.ckpt_every)
     n_params, _ = F.param_count(cfg)
-    history = {"loss": [], "step_time": [], "stragglers": 0, "restored_at": start_step}
+
+    # Telemetry (repro.obs): registry + MFU meter always on (host-side
+    # arithmetic around the jitted step -- the jaxpr is pinned identical
+    # with/without them by tests/test_obs.py); span tracing when asked.
+    from repro.obs import MetricsRegistry, TraceRecorder, TrainEfficiency
+
+    obs = loop.registry if loop.registry is not None else MetricsRegistry()
+    eff = TrainEfficiency(cfg, loop.batch_size, loop.seq_len, obs)
+    c_stragglers = obs.counter("train/stragglers")
+    c_ckpts = obs.counter("train/checkpoints")
+    g_loss = obs.gauge("train/loss")
+    tracer = TraceRecorder(process="train") if loop.trace_out else None
+
+    history = {"loss": [], "step_time": [], "stragglers": 0,
+               "restored_at": start_step, "registry": obs}
     print(f"[train] {cfg.name}: {n_params/1e6:.1f}M params, "
           f"{loop.steps} steps x {loop.batch_size}x{loop.seq_len} tokens, attn={loop.attn_impl}")
 
     for step in range(start_step, loop.steps):
+        t_step0 = tracer.now_us() if tracer else 0.0
+        t_data0 = time.perf_counter()
         out = data.batch(step)
         if not isinstance(out, dict):
             out = {"inputs": out[0], "targets": out[1]}
         batch = {k: jnp.asarray(v) for k, v in out.items()}
+        t_data = time.perf_counter() - t_data0
         monitor.start()
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         loss = float(metrics["loss"])
         ev = monitor.stop()
         if ev is not None:
             history["stragglers"] += 1
+            c_stragglers.inc()
         history["loss"].append(loss)
         history["step_time"].append(monitor.times[-1])
+        eff.step(monitor.times[-1])
+        g_loss.set(loss)
+        if tracer:
+            tracer.complete("data", 0, t_step0, t_data * 1e6)
+            tracer.complete("compute", 0, t_step0 + t_data * 1e6,
+                            monitor.times[-1] * 1e6,
+                            args={"loss": loss, "step": step})
         if step % loop.log_every == 0 or step == loop.steps - 1:
-            toks = loop.batch_size * loop.seq_len
+            snap = obs.snapshot()
             print(f"[train] step {step:5d} loss {loss:8.4f} "
                   f"gnorm {float(metrics['grad_norm']):7.3f} "
                   f"lr {float(metrics['lr']):.2e} "
-                  f"{toks/monitor.times[-1]:8.0f} tok/s", flush=True)
+                  f"{snap['train/tokens_per_s']:8.0f} tok/s "
+                  f"mfu {snap['train/mfu']:.4f}", flush=True)
+        t_ckpt0, t_ckpt0_us = time.perf_counter(), (tracer.now_us() if tracer else 0.0)
         if store is not None and cadence.should_checkpoint(step + 1, monitor.median):
-            t0 = time.perf_counter()
             data_state = dict(data.state())
             data_state["step"] = step + 1
             store.save(step + 1, (params, opt_state),
                        meta={"step": step + 1, "data": data_state,
                              "config": cfg.name}, async_=True)
-            cadence.observe_write(time.perf_counter() - t0)
+            cadence.observe_write(time.perf_counter() - t_ckpt0)
             cadence.mark()
+            c_ckpts.inc()
+            if tracer:
+                tracer.complete("checkpoint", 0, t_ckpt0_us,
+                                (time.perf_counter() - t_ckpt0) * 1e6,
+                                args={"step": step + 1})
+        if tracer:
+            tracer.complete("step", 0, t_step0, tracer.now_us() - t_step0,
+                            args={"step": step})
     if store is not None:
         store.wait()
+    if loop.metrics_out:
+        from repro.obs import default_registry
+
+        snap = obs.snapshot()
+        snap.update(default_registry().snapshot())  # kernel knob counters
+        with open(loop.metrics_out, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+        print(f"[train] wrote metrics snapshot to {loop.metrics_out}")
+    if tracer is not None:
+        tracer.save(loop.trace_out)
+        print(f"[train] wrote Perfetto trace ({len(tracer.events)} events) "
+              f"to {loop.trace_out}")
     return params, opt_state, history
 
 
@@ -198,6 +250,11 @@ def main():
     ap.add_argument("--attn-sharding", default=None,
                     choices=("heads", "sequence", "ring"),
                     help="override the arch's attention sharding strategy")
+    ap.add_argument("--trace-out", default=None,
+                    help="write step/data/compute/checkpoint spans as "
+                         "Perfetto trace_event JSON here")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the final metrics snapshot (JSON) here")
     args = ap.parse_args()
 
     cfg = resolve_model(args.arch, args.preset, args.reduce)
@@ -206,14 +263,18 @@ def main():
         microbatches=args.microbatches, attn_impl=args.attn, ckpt_dir=args.ckpt_dir,
         packed=args.packed, model_axis=args.model_axis,
         attn_sharding=args.attn_sharding,
+        trace_out=args.trace_out, metrics_out=args.metrics_out,
     )
     _, _, history = train(cfg, loop)
     first = np.mean(history["loss"][:5]) if history["loss"] else float("nan")
     last = np.mean(history["loss"][-5:]) if history["loss"] else float("nan")
+    snap = history["registry"].snapshot()
     print(json.dumps({"first5_loss": round(float(first), 4),
                       "last5_loss": round(float(last), 4),
                       "median_step_s": round(float(np.median(history['step_time'])), 4),
-                      "stragglers": history["stragglers"]}))
+                      "stragglers": history["stragglers"],
+                      "mfu": snap.get("train/mfu"),
+                      "tokens_per_s": round(snap.get("train/tokens_per_s", 0.0), 1)}))
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ engine-geometry-static, so requests join/leave with zero recompiles
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -36,6 +37,9 @@ from repro.launch.steps import (
     build_prefill_step,
     build_serve_step,
 )
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.mfu import DecodeEfficiency
+from repro.obs.trace import TraceRecorder
 from repro.serving.kv_pool import KVPagePool
 
 
@@ -59,6 +63,138 @@ class Request:
 
 
 _CACHE_BASE_NDIM = {"k": 4, "v": 4, "h": 3, "conv": 3}  # (B, ...) leaf ranks
+
+# Fixed buckets for the admission-size histogram (prompt pad buckets are
+# prompt_pad multiples clamped to capacity; pow2 bounds cover both engines)
+ADMIT_BUCKETS = (16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0)
+QUEUE_WAIT_BUCKETS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0)
+
+
+class _EngineTelemetry:
+    """Shared observability surface of both serving engines.
+
+    Everything is host-side (obs/metrics, obs/trace, obs/mfu): it runs
+    *around* the jitted steps and never enters a trace, so enabling
+    telemetry adds zero compiles and leaves the step shapes untouched
+    (tests/test_obs.py pins ``decode_compiles == 1`` with it on).
+
+    Registry schema (``snapshot()``; the common interface that replaced
+    the paged-only ``stats()``):
+
+      counters   serving/{tokens, admissions, retirements, ticks}
+                 decode/{ticks, tokens, model_flops, compute_seconds}
+      gauges     decode/{mfu, tokens_per_s}  (cumulative; obs/mfu)
+      gauge_fns  serving/{active_slots, slot_utilization, queue_depth,
+                 kv_cells_active, kv_cells_capacity, token_occupancy}
+                 (+ kv_pool/* and serving/{preemptions,page_oom} paged)
+      histograms serving/admit_bucket (admitted pad bucket, tokens),
+                 serving/queue_wait_ticks (submit -> admission, ticks)
+    """
+
+    def _obs_init(self, registry: Optional[MetricsRegistry],
+                  tracer: Optional[TraceRecorder]):
+        self.obs = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer
+        self._c_tokens = self.obs.counter("serving/tokens")
+        self._c_admissions = self.obs.counter("serving/admissions")
+        self._c_retirements = self.obs.counter("serving/retirements")
+        self._c_ticks = self.obs.counter("serving/ticks")
+        self._h_bucket = self.obs.histogram("serving/admit_bucket", ADMIT_BUCKETS)
+        self._h_wait = self.obs.histogram(
+            "serving/queue_wait_ticks", QUEUE_WAIT_BUCKETS
+        )
+        self._eff = DecodeEfficiency(self.cfg, self.obs)
+        self.obs.gauge_fn(
+            "serving/active_slots",
+            lambda: sum(s is not None for s in self.slots),
+        )
+        self.obs.gauge_fn(
+            "serving/slot_utilization",
+            lambda: sum(s is not None for s in self.slots) / self.B,
+        )
+        self.obs.gauge_fn("serving/queue_depth", lambda: len(self.queue))
+        self.obs.gauge_fn("serving/kv_cells_active", self.active_kv_cells)
+        self.obs.gauge_fn("serving/kv_cells_capacity", self.kv_capacity)
+        self.obs.gauge_fn(
+            "serving/token_occupancy",
+            lambda: self.resident_tokens() / max(1, self.kv_capacity()),
+        )
+        self._submit_tick: Dict[int, int] = {}  # rid -> tick at (re)submit
+        self._submit_ts: Dict[int, float] = {}  # rid -> trace us at submit
+        self._decode_t0: Dict[int, float] = {}  # rid -> decode-span start us
+        self._preempted_rids: set = set()  # resumes owe a 'resume' instant
+
+    def snapshot(self) -> Dict[str, float]:
+        """Flat metrics snapshot (obs/metrics schema); both engines."""
+        return self.obs.snapshot()
+
+    @property
+    def decode_compiles(self) -> int:
+        return self._step._cache_size()
+
+    # --------------------------------------------------- lifecycle hooks
+    def _note_submit(self, req: Request, *, resumed: bool = False):
+        self._submit_tick[req.rid] = self.ticks
+        if self.tracer:
+            self.tracer.name_thread(req.rid, f"req {req.rid}")
+            self._submit_ts[req.rid] = self.tracer.now_us()
+            if not resumed:
+                self.tracer.instant(
+                    "submit", tid=req.rid,
+                    args={"rid": req.rid, "prompt_len": len(req.prompt)},
+                )
+
+    def _note_admission(self, req: Request, bucket: int,
+                        t_pref0: float, t_pref1: float):
+        """One request admitted: counters + the rid track's queue_wait /
+        prefill spans ([submit, admit) and [admit, prefill-done))."""
+        self._c_admissions.inc()
+        self._h_bucket.observe(bucket)
+        self._h_wait.observe(self.ticks - self._submit_tick.pop(req.rid, self.ticks))
+        if self.tracer:
+            sub = self._submit_ts.pop(req.rid, t_pref0)
+            self.tracer.complete("queue_wait", req.rid, sub, t_pref0 - sub)
+            self.tracer.complete(
+                "prefill", req.rid, t_pref0, t_pref1 - t_pref0,
+                args={"bucket": bucket, "feed_len": len(req.feed)},
+            )
+            if req.rid in self._preempted_rids:
+                self._preempted_rids.discard(req.rid)
+                self.tracer.instant("resume", tid=req.rid, args={"rid": req.rid})
+            self._decode_t0[req.rid] = t_pref1
+
+    def _note_leave(self, req: Request, *, preempted: bool):
+        """Request left its slot (retire or preempt): close its decode
+        span; a preempt emits the matching instant (resume pairs with it
+        at re-admission -- tests assert both carry the same rid)."""
+        if not preempted:
+            self._c_retirements.inc()
+        if self.tracer:
+            now = self.tracer.now_us()
+            t0 = self._decode_t0.pop(req.rid, now)
+            self.tracer.complete(
+                "decode", req.rid, t0, now - t0,
+                args={"generated": len(req.generated), "preempted": preempted},
+            )
+            self.tracer.instant(
+                "preempt" if preempted else "retire", tid=req.rid,
+                args={"rid": req.rid},
+            )
+
+    def _note_decode_tick(self, cache_lens, t0_us: float, dt_s: float):
+        self._c_ticks.inc()
+        live = self._eff.tick(cache_lens, dt_s)
+        self._c_tokens.inc(live)
+        if self.tracer:
+            self.tracer.complete(
+                "decode_tick", 0, t0_us, dt_s * 1e6, args={"live": live}
+            )
+            self.tracer.counter(
+                "resident", {"slots": live, "tokens": self.resident_tokens()}
+            )
+
+    def _now_us(self) -> float:
+        return self.tracer.now_us() if self.tracer else 0.0
 
 
 def _batch_axis(path, leaf) -> int:
@@ -85,7 +221,7 @@ def _tree_slot_write(batched, single, slot: int):
     return jax.tree_util.tree_map_with_path(one, batched, single)
 
 
-class ServingEngine:
+class ServingEngine(_EngineTelemetry):
     def __init__(
         self,
         cfg: ModelConfig,
@@ -95,6 +231,8 @@ class ServingEngine:
         max_batch: int = 4,
         cache_size: int = 512,
         prompt_pad: int = 64,
+        registry: Optional[MetricsRegistry] = None,
+        tracer: Optional[TraceRecorder] = None,
     ):
         assert cfg.family != "encdec", "engine serves decoder-only families"
         self.cfg = cfg
@@ -118,9 +256,23 @@ class ServingEngine:
         self.queue: List[Request] = []
         self.finished: Dict[int, Request] = {}
         self.ticks = 0
+        self._obs_init(registry, tracer)
+
+    # ----------------------------------------------------------- metrics
+    def resident_tokens(self) -> int:
+        return int(np.asarray(self.cache_len).sum())
+
+    def active_kv_cells(self) -> int:
+        """KV cells the decode step touches: every slot's full slice,
+        live or not (the cost the paged engine's page skip removes)."""
+        return self.B * self.cache_size
+
+    def kv_capacity(self) -> int:
+        return self.B * self.cache_size
 
     # ------------------------------------------------------------- admin
     def submit(self, req: Request):
+        self._note_submit(req)
         self.queue.append(req)
 
     def _admit(self, slot: int, req: Request):
@@ -143,8 +295,10 @@ class ServingEngine:
         batch = {"inputs": jnp.asarray(prompt_arr)}
         if self._bucket:
             batch["lens"] = jnp.asarray([L], jnp.int32)
+        t_pref0 = self._now_us()
         tok, cache1, lens = self._prefill(self.params, batch)
         true_len = int(lens[0])
+        self._note_admission(req, pad_to, t_pref0, self._now_us())
         self.caches = _tree_slot_write(self.caches, cache1, slot)
         self.cache_len = self.cache_len.at[slot].set(true_len)
         self.next_token = self.next_token.at[slot].set(int(tok[0, 0]))
@@ -156,6 +310,7 @@ class ServingEngine:
         if req is not None:
             req.done = True
             self.finished[req.rid] = req
+            self._note_leave(req, preempted=False)
         self.slots[slot] = None
         self.cache_len = self.cache_len.at[slot].set(0)
 
@@ -167,6 +322,8 @@ class ServingEngine:
                 self._admit(slot, self.queue.pop(0))
         if not any(self.slots):
             return
+        lens_before = np.asarray(self.cache_len)
+        t0_us, t0 = self._now_us(), time.perf_counter()
         tok, self.caches = self._step(
             self.params, self.next_token, self.caches, self.cache_len
         )
@@ -176,6 +333,10 @@ class ServingEngine:
         self.next_token = tok
         tok_host = np.asarray(tok)
         self.ticks += 1
+        self._note_decode_tick(
+            [int(l) for l, s in zip(lens_before, self.slots) if s is not None],
+            t0_us, time.perf_counter() - t0,
+        )
         for slot, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -196,7 +357,7 @@ def _next_pow2(n: int) -> int:
     return 1 << max(0, (n - 1).bit_length())
 
 
-class PagedServingEngine:
+class PagedServingEngine(_EngineTelemetry):
     """Continuous batching over a paged KV pool.
 
     HBM holds ``num_pages`` physical pages of ``page_size`` tokens per
@@ -234,6 +395,8 @@ class PagedServingEngine:
         page_size: int = 16,
         pages_per_seq_max: int = 16,
         prompt_pad: int = 64,
+        registry: Optional[MetricsRegistry] = None,
+        tracer: Optional[TraceRecorder] = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -260,30 +423,33 @@ class PagedServingEngine:
         self.preemptions = 0
         self._seq = 0  # admission order, for preempt-youngest
         self._slot_seq = np.zeros((max_batch,), np.int64)
+        self._obs_init(registry, tracer)
+        self.pool.register_metrics(self.obs)
+        self._c_page_oom = self.obs.counter("serving/page_oom")
+        self.obs.gauge_fn("serving/preemptions", lambda: float(self.preemptions))
+        # fraction of *allocated* page cells holding real KV
+        self.obs.gauge_fn(
+            "serving/page_fill",
+            lambda: self.resident_tokens()
+            / max(1, self.pool.used_pages * self.ps),
+        )
 
     # ----------------------------------------------------------- metrics
-    @property
-    def decode_compiles(self) -> int:
-        return self._step._cache_size()
-
     @property
     def admit_compiles(self) -> int:
         return self._admit._cache_size()
 
-    def stats(self) -> Dict[str, float]:
-        active = sum(s is not None for s in self.slots)
-        tokens = int(self.cache_len.sum())
-        usable = self.pool.usable_pages
-        return {
-            "active_slots": active,
-            "slot_utilization": active / self.B,
-            "used_pages": self.pool.used_pages,
-            "page_utilization": self.pool.page_utilization(),
-            # fraction of *allocated* page cells holding real KV
-            "page_fill": tokens / max(1, self.pool.used_pages * self.ps),
-            # fraction of the whole pool holding real KV
-            "token_occupancy": tokens / (usable * self.ps),
-        }
+    def resident_tokens(self) -> int:
+        return int(self.cache_len.sum())
+
+    def active_kv_cells(self) -> int:
+        """KV cells the decode step touches: live rows' allocated pages
+        only -- the page-level ``pl.when`` skip reads nothing else."""
+        return int(sum(-(-int(l) // self.ps) * self.ps
+                       for l in self.cache_len if int(l) > 0))
+
+    def kv_capacity(self) -> int:
+        return self.pool.usable_pages * self.ps
 
     # ------------------------------------------------------------- admin
     def _need_pages(self, tokens: int) -> int:
@@ -299,6 +465,7 @@ class PagedServingEngine:
         assert self._need_pages(len(req.prompt)) <= self.pool.usable_pages, (
             f"request {req.rid}: prompt alone overflows the pool"
         )
+        self._note_submit(req)
         self.queue.append(req)
 
     def _bucket(self, L: int) -> int:
@@ -353,6 +520,7 @@ class PagedServingEngine:
                 lens[i] = len(feed)
                 n_dest = min(-(-len(feed) // self.ps), npb)
                 dest[i, :n_dest] = pages[:n_dest]
+            t_pref0 = self._now_us()
             tok, lens_total, self.caches = self._admit(
                 self.params,
                 {"inputs": jnp.asarray(inputs), "lens": jnp.asarray(lens)},
@@ -360,7 +528,9 @@ class PagedServingEngine:
                 jnp.asarray(dest),
             )
             tok_host = np.asarray(tok)
+            t_pref1 = self._now_us()
             for i, (slot, req, pages) in enumerate(group):
+                self._note_admission(req, pad_to, t_pref0, t_pref1)
                 self.table[slot] = 0
                 self.table[slot, : len(pages)] = pages
                 self.cache_len[slot] = int(lens_total[i])
@@ -383,6 +553,7 @@ class PagedServingEngine:
         self.pool.free(req.rid)
         req.done = True
         self.finished[req.rid] = req
+        self._note_leave(req, preempted=False)
         self._clear_slot(slot)
 
     def _preempt_youngest(self) -> bool:
@@ -395,6 +566,9 @@ class PagedServingEngine:
         victim = max(active, key=lambda i: self._slot_seq[i])
         req = self.slots[victim]
         self.pool.free(req.rid)
+        self._note_leave(req, preempted=True)
+        self._preempted_rids.add(req.rid)
+        self._note_submit(req, resumed=True)
         self.queue.insert(0, req)
         self._clear_slot(victim)
         self.preemptions += 1
@@ -417,6 +591,11 @@ class PagedServingEngine:
             ):
                 page = self.pool.extend(req.rid)
                 if page is None:
+                    self._c_page_oom.inc()
+                    if self.tracer:
+                        self.tracer.instant(
+                            "page_oom", tid=0, args={"rid": req.rid}
+                        )
                     if not self._preempt_youngest():
                         raise RuntimeError(
                             "page pool exhausted with a single resident "
@@ -432,6 +611,8 @@ class PagedServingEngine:
         self._admit_tick()
         if not any(s is not None for s in self.slots):
             return
+        lens_before = self.cache_len.copy()
+        t0_us, t0 = self._now_us(), time.perf_counter()
         tok, self.caches = self._step(
             self.params,
             jnp.asarray(self.next_token),
@@ -441,6 +622,9 @@ class PagedServingEngine:
         )
         tok_host = np.asarray(tok)
         self.ticks += 1
+        self._note_decode_tick(
+            lens_before, t0_us, time.perf_counter() - t0
+        )
         for slot, req in enumerate(self.slots):
             if req is None:
                 continue

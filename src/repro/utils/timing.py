@@ -31,9 +31,30 @@ from typing import Callable, Dict, Mapping
 
 import jax
 
-__all__ = ["interleaved_timeit", "time_min"]
+__all__ = ["TimingResult", "interleaved_timeit", "time_min"]
 
 DEFAULT_ITERS = 5
+
+
+class TimingResult(Dict[str, float]):
+    """``{name: best_seconds}`` plus the discipline that produced it.
+
+    ``iters`` (timed rounds per competitor) and ``warmup`` (untimed
+    calls) ride along so BENCH ledger rows can be self-describing about
+    their timing provenance -- ``provenance`` renders the canonical
+    ``min_of_{iters}w{warmup}`` tag the benchmark modules append to their
+    ``derived`` column. Plain-dict semantics are unchanged (drop-in for
+    every existing caller).
+    """
+
+    def __init__(self, best: Dict[str, float], iters: int, warmup: int):
+        super().__init__(best)
+        self.iters = iters
+        self.warmup = warmup
+
+    @property
+    def provenance(self) -> str:
+        return f"min_of_{self.iters}w{self.warmup}"
 
 
 def interleaved_timeit(
@@ -41,27 +62,30 @@ def interleaved_timeit(
     *args,
     iters: int = DEFAULT_ITERS,
     warmup: int = 1,
-) -> Dict[str, float]:
+) -> TimingResult:
     """Time competing callables interleaved; return best seconds per name.
 
     Every callable is invoked as ``fn(*args)``; ``warmup`` untimed calls
     each (compilation + first-touch) precede ``iters`` timed rounds. In
     each round the callables run round-robin in insertion order, and each
-    keeps the minimum of its per-round samples.
+    keeps the minimum of its per-round samples. The returned mapping is a
+    :class:`TimingResult`: a plain dict of best seconds that also carries
+    the (iters, warmup) provenance for self-describing ledger rows.
     """
+    iters, warmup = max(1, iters), max(1, warmup)
     items = list(fns.items())
     if not items:
-        return {}
+        return TimingResult({}, iters, warmup)
     for _, fn in items:
-        for _ in range(max(1, warmup)):
+        for _ in range(warmup):
             jax.block_until_ready(fn(*args))
     best = {name: float("inf") for name, _ in items}
-    for _ in range(max(1, iters)):
+    for _ in range(iters):
         for name, fn in items:
             t0 = time.perf_counter()
             jax.block_until_ready(fn(*args))
             best[name] = min(best[name], time.perf_counter() - t0)
-    return best
+    return TimingResult(best, iters, warmup)
 
 
 def time_min(fn: Callable, *args, iters: int = DEFAULT_ITERS, warmup: int = 1) -> float:

@@ -1,0 +1,405 @@
+"""Unified telemetry layer (ISSUE 8): metrics registry, lifecycle
+tracing, MFU accounting -- and the load-bearing pin that attaching ANY of
+it adds zero compiles and leaves jitted step shapes untouched."""
+
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry as cfg_registry
+from repro.configs.base import ModelConfig
+from repro.core.attention import AttentionConfig
+from repro.core.masks import MaskSpec
+from repro.models import lm
+from repro.obs import (
+    DecodeEfficiency,
+    MetricsRegistry,
+    TraceRecorder,
+    TrainEfficiency,
+    count_knob,
+    default_registry,
+    peak_flops,
+    reset_default_registry,
+    validate_trace,
+)
+from repro.serving.engine import PagedServingEngine, Request, ServingEngine
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_gauge_snapshot():
+    reg = MetricsRegistry()
+    c = reg.counter("x/hits")
+    c.inc()
+    c.inc(2.5)
+    reg.gauge("x/level").set(0.75)
+    assert reg.snapshot() == {"x/hits": 3.5, "x/level": 0.75}
+    # re-requesting a name returns the same instrument
+    assert reg.counter("x/hits") is c
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_histogram_cumulative_le_schema():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", (1.0, 4.0, 16.0))
+    for v in (0.5, 3.0, 3.0, 20.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    # Prometheus cumulative semantics: le_B counts everything <= B
+    assert snap["lat/le_1"] == 1.0
+    assert snap["lat/le_4"] == 3.0
+    assert snap["lat/le_16"] == 3.0
+    assert snap["lat/le_inf"] == 4.0
+    assert snap["lat/count"] == 4.0
+    assert snap["lat/sum"] == pytest.approx(26.5)
+    with pytest.raises(ValueError):
+        reg.histogram("lat", (1.0, 2.0))  # different buckets
+    with pytest.raises(ValueError):
+        MetricsRegistry().histogram("bad", (4.0, 1.0))  # not ascending
+
+
+def test_gauge_fn_lazy_and_fault_isolated():
+    reg = MetricsRegistry()
+    state = {"v": 1.0}
+    reg.gauge_fn("pool/fill", lambda: state["v"])
+    state["v"] = 0.5  # sampled at snapshot time, not registration time
+    assert reg.snapshot()["pool/fill"] == 0.5
+
+    def boom():
+        raise RuntimeError("pool is gone")
+
+    reg.gauge_fn("pool/fill", boom)  # re-register replaces the sampler
+    assert math.isnan(reg.snapshot()["pool/fill"])  # never raises
+
+
+def test_kind_conflict_raises():
+    reg = MetricsRegistry()
+    reg.counter("n")
+    with pytest.raises(ValueError):
+        reg.gauge("n")
+    with pytest.raises(ValueError):
+        reg.histogram("n", (1.0,))
+
+
+def test_count_knob_default_registry():
+    reset_default_registry()
+    count_knob("flash_pallas", "tuned", 3)
+    count_knob("flash_pallas", "explicit")
+    assert default_registry().snapshot() == {
+        "knobs/flash_pallas/tuned": 3.0,
+        "knobs/flash_pallas/explicit": 1.0,
+    }
+    with pytest.raises(ValueError):
+        count_knob("flash_pallas", "vibes")
+    reset_default_registry()
+    assert default_registry().snapshot() == {}
+
+
+def test_knob_resolution_sources_counted():
+    """resolve_pallas_knobs classifies each knob's winning tier."""
+    from repro.kernels.ops import PallasFlashConfig, resolve_pallas_knobs
+
+    shapes = ((1, 128, 2, 32), (1, 128, 2, 32))
+    reset_default_registry()
+    # all four knobs explicit, dense schedule -> no partition knobs in play
+    resolve_pallas_knobs(
+        PallasFlashConfig(spec=MaskSpec(causal=True), block_q=64, block_kv=64,
+                          schedule="dense", bwd="fused", use_tuned=False),
+        *shapes,
+    )
+    assert default_registry().snapshot() == {"knobs/flash_pallas/explicit": 4.0}
+
+    reset_default_registry()
+    # nothing explicit, cache off -> heuristics fill every knob (compact
+    # schedule puts num_q_bands/kv_splits in play: 6 total)
+    resolve_pallas_knobs(
+        PallasFlashConfig(spec=MaskSpec(causal=True), use_tuned=False), *shapes
+    )
+    snap = default_registry().snapshot()
+    assert snap == {"knobs/flash_pallas/heuristic": 6.0}
+    reset_default_registry()
+
+
+def test_decode_splits_source_counted():
+    from repro.kernels.autotune import resolve_decode_splits
+
+    reset_default_registry()
+    resolve_decode_splits(256, 4, 64, jnp.float32, use_tuned=False, default=4)
+    resolve_decode_splits(256, 4, 64, jnp.float32, page_size=8,
+                          use_tuned=False, default=4)
+    snap = default_registry().snapshot()
+    assert snap["knobs/flash_decode/heuristic"] == 1.0
+    assert snap["knobs/flash_decode_paged8/heuristic"] == 1.0
+    reset_default_registry()
+
+
+# ---------------------------------------------------------------------------
+# Trace recorder + validator
+# ---------------------------------------------------------------------------
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_trace_spans_nest_and_validate(tmp_path):
+    clk = _FakeClock()
+    tr = TraceRecorder(process="unit", clock=clk)
+    with tr.span("outer", tid=1):
+        clk.t += 1e-3
+        with tr.span("inner", tid=1):
+            clk.t += 1e-3
+        tr.instant("mark", tid=1, args={"rid": 7})
+        clk.t += 1e-3
+    tr.counter("occupancy", {"slots": 2})
+    path = tmp_path / "t.json"
+    tr.save(str(path))
+    with open(path) as f:
+        doc = json.load(f)
+    events = validate_trace(doc)
+    by_name = {e["name"]: e for e in events if e["ph"] in ("X", "i")}
+    assert by_name["inner"]["ts"] >= by_name["outer"]["ts"]
+    assert (by_name["inner"]["ts"] + by_name["inner"]["dur"]
+            <= by_name["outer"]["ts"] + by_name["outer"]["dur"])
+    assert by_name["outer"]["dur"] == pytest.approx(3e3)
+    # process metadata event is present and first
+    assert doc["traceEvents"][0]["ph"] == "M"
+
+
+def test_trace_validator_rejects_bad_events():
+    with pytest.raises(ValueError):
+        validate_trace({"traceEvents": [{"name": "x", "ph": "X", "ts": 0}]})
+    with pytest.raises(ValueError):
+        validate_trace(
+            {"traceEvents": [{"ph": "X", "ts": 0, "pid": 1, "dur": -5}]}
+        )
+    with pytest.raises(ValueError):
+        validate_trace({"traceEvents": [{"ph": "i", "pid": 1}]})  # no ts
+    # straddling spans on one track: [0, 10) vs [5, 15) neither nests
+    with pytest.raises(ValueError):
+        validate_trace({"traceEvents": [
+            {"name": "a", "ph": "X", "ts": 0, "dur": 10, "pid": 1, "tid": 1},
+            {"name": "b", "ph": "X", "ts": 5, "dur": 10, "pid": 1, "tid": 1},
+        ]})
+    # different tracks may overlap freely
+    validate_trace({"traceEvents": [
+        {"name": "a", "ph": "X", "ts": 0, "dur": 10, "pid": 1, "tid": 1},
+        {"name": "b", "ph": "X", "ts": 5, "dur": 10, "pid": 1, "tid": 2},
+    ]})
+
+
+# ---------------------------------------------------------------------------
+# MFU accounting
+# ---------------------------------------------------------------------------
+
+TINY = ModelConfig(
+    name="obs-tiny", family="dense", num_layers=2, d_model=64, num_heads=2,
+    num_kv_heads=2, head_dim=32, d_ff=128, vocab_size=256, vocab_pad_to=64,
+    dtype="float32",
+)
+
+
+def test_peak_flops_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_PEAK_FLOPS", "2.5e12")
+    assert peak_flops() == 2.5e12
+    monkeypatch.delenv("REPRO_PEAK_FLOPS")
+    assert peak_flops("tpu") == 197e12
+    assert peak_flops("unknown-chip") == peak_flops("cpu")
+
+
+def test_train_efficiency_gauges():
+    reg = MetricsRegistry()
+    eff = TrainEfficiency(TINY, batch_size=2, seq_len=128, registry=reg,
+                          peak=1e12)
+    eff.step(0.5)
+    eff.step(0.5)
+    snap = reg.snapshot()
+    assert snap["train/steps"] == 2.0
+    assert snap["train/tokens"] == 512.0
+    assert snap["train/tokens_per_s"] == pytest.approx(512.0)
+    assert snap["train/mfu"] > 0 and math.isfinite(snap["train/mfu"])
+    # causal mask: the kernels launch less attention work than the
+    # Megatron numerator charges, so HFU (achieved/launched) <= MFU basis
+    assert eff.hardware_flops_per_step <= eff.model_flops_per_step
+    assert 0 < snap["train/hfu"] <= snap["train/mfu"]
+    # cumulative utilization equals the per-step value for equal steps
+    assert snap["train/mfu"] == pytest.approx(
+        eff.model_flops_per_step / 0.5 / 1e12
+    )
+
+
+def test_decode_efficiency_charges_live_rows_only():
+    reg = MetricsRegistry()
+    eff = DecodeEfficiency(TINY, reg, peak=1e12)
+    dead = eff.tick_model_flops([0, 0])
+    assert dead == 0.0
+    one = eff.tick_model_flops([16])
+    two = eff.tick_model_flops([16, 0, 16])
+    assert two == pytest.approx(2 * one)
+    # longer caches cost more (the 4*d_q*L attention read term)
+    assert eff.tick_model_flops([32]) > one
+    live = eff.tick([16, 0, 16], seconds=0.25)
+    assert live == 2
+    snap = reg.snapshot()
+    assert snap["decode/tokens"] == 2.0
+    assert snap["decode/tokens_per_s"] == pytest.approx(8.0)
+    assert math.isfinite(snap["decode/mfu"]) and snap["decode/mfu"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: common snapshot interface + THE zero-overhead pin
+# ---------------------------------------------------------------------------
+
+ATTN = AttentionConfig(impl="flash_xla", block_q=64, block_kv=64,
+                       decode_splits=2)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = cfg_registry.reduce_config(cfg_registry.get("qwen3-8b"))
+    params = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_fixed_engine_snapshot_and_compiles(model):
+    """The fixed engine now speaks the same snapshot()/decode_compiles
+    interface as the paged one (satellite a)."""
+    cfg, params = model
+    reg = MetricsRegistry()
+    eng = ServingEngine(cfg, params, ATTN, max_batch=2, cache_size=64,
+                        prompt_pad=16, registry=reg)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=[3 + i] * (4 + i), max_new_tokens=4))
+    done = eng.run(max_ticks=200)
+    assert sorted(done) == [0, 1, 2]
+    assert eng.decode_compiles == 1  # telemetry attached, still one trace
+    snap = eng.snapshot()
+    assert snap is not reg  # flat dict export
+    assert snap["serving/admissions"] == 3.0
+    assert snap["serving/retirements"] == 3.0
+    assert snap["serving/admit_bucket/count"] == 3.0
+    assert snap["serving/kv_cells_capacity"] == 2 * 64
+    assert snap["serving/active_slots"] == 0.0  # all retired by now
+    assert math.isfinite(snap["decode/mfu"]) and snap["decode/mfu"] > 0
+    assert snap["decode/tokens_per_s"] > 0
+
+
+def test_paged_engine_zero_compile_overhead_with_full_telemetry(model):
+    """THE acceptance pin: registry + tracer attached, driven through the
+    join/leave/preempt trace of test_paged -- decode still compiles ONCE,
+    and the exported trace is schema-valid with paired preempt/resume."""
+    cfg, params = model
+    rng = np.random.default_rng(3)
+    prompts = [list(map(int, rng.integers(1, 100, 6))) for _ in range(4)]
+    reg = MetricsRegistry()
+    tracer = TraceRecorder(process="test-paged")
+    eng = PagedServingEngine(cfg, params, ATTN, max_batch=4, num_pages=14,
+                             page_size=4, pages_per_seq_max=8, prompt_pad=16,
+                             registry=reg, tracer=tracer)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=list(p), max_new_tokens=24))
+    done = eng.run(max_ticks=1000)
+    assert sorted(done) == list(range(4))
+    assert eng.preemptions > 0, "pool was sized to force preemption"
+    assert eng.decode_compiles == 1  # telemetry adds ZERO compiles
+
+    snap = eng.snapshot()
+    assert snap["serving/preemptions"] == eng.preemptions
+    assert snap["kv_pool/num_pages"] == eng.pool.usable_pages
+    assert snap["kv_pool/used_pages"] == 0.0  # everything freed on retire
+    assert snap["serving/admit_bucket/count"] == snap["serving/admissions"]
+    assert snap["serving/admissions"] == 4 + eng.preemptions  # re-admits
+    assert math.isfinite(snap["decode/mfu"]) and snap["decode/mfu"] > 0
+
+    events = validate_trace(tracer.to_json())  # raises on schema violation
+    # every request track carries the full lifecycle span chain
+    for rid in range(4):
+        names = {e["name"] for e in events if e.get("tid") == rid}
+        assert {"submit", "queue_wait", "prefill", "decode", "retire"} <= names
+    # forced preemption emits preempt + resume instants for the SAME rid
+    preempted = {e["args"]["rid"] for e in events if e["name"] == "preempt"}
+    resumed = {e["args"]["rid"] for e in events if e["name"] == "resume"}
+    assert preempted and preempted == resumed
+    # the engine track saw decode ticks and resident-counter samples
+    assert any(e["name"] == "decode_tick" and e["ph"] == "X" for e in events)
+    assert any(e["ph"] == "C" and e["name"] == "resident" for e in events)
+
+
+def test_train_step_jaxpr_unchanged_by_telemetry():
+    """The jitted train step's jaxpr is bit-identical whether or not a
+    registry and MFU meter are attached -- telemetry is host-side only."""
+    from repro.launch.steps import build_train_step
+    from repro.training.optimizer import AdamWConfig, init_opt_state
+
+    params = lm.init_lm(TINY, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    batch = {"inputs": jnp.zeros((2, 32), jnp.int32),
+             "targets": jnp.ones((2, 32), jnp.int32)}
+    attn = AttentionConfig(impl="ref")
+    step = build_train_step(TINY, attn, AdamWConfig(), ce_chunk=64)
+    plain = str(jax.make_jaxpr(step)(params, opt, batch))
+
+    reg = MetricsRegistry()
+    eff = TrainEfficiency(TINY, batch_size=2, seq_len=32, registry=reg)
+    tracer = TraceRecorder(process="train-test")
+    with tracer.span("step"):
+        eff.step(0.01)
+    instrumented = str(jax.make_jaxpr(step)(params, opt, batch))
+    assert plain == instrumented
+
+
+# ---------------------------------------------------------------------------
+# Satellites: ledger schema check + timing provenance
+# ---------------------------------------------------------------------------
+
+
+def test_bench_schema_check_tags_nonconforming(capsys):
+    import sys
+
+    sys.path.insert(0, "benchmarks")
+    try:
+        from run import _check_schema
+    finally:
+        sys.path.pop(0)
+
+    rows = [
+        {"bench": "ok", "config": "a", "us_per_call": 1.0, "derived": ""},
+        {"bench": "ok2", "config": "b", "us_per_call": None, "derived": "x=1"},
+        {"bench": "", "config": "c", "us_per_call": 1.0, "derived": ""},
+        {"bench": "no_units", "config": "d", "us_per_call": None, "derived": ""},
+        {"bench": "missing"},
+        {"bench": "fixed", "config": "e", "us_per_call": 2.0, "derived": "",
+         "schema": "nonconforming: stale tag"},
+    ]
+    out = _check_schema(rows)
+    assert out is rows  # warn-and-tag, never drop
+    assert "schema" not in rows[0] and "schema" not in rows[1]
+    assert rows[2]["schema"] == "nonconforming: empty bench name"
+    assert rows[3]["schema"].startswith("nonconforming: no units field")
+    assert rows[4]["schema"].startswith("nonconforming: missing keys")
+    assert "schema" not in rows[5]  # conforming again -> stale tag cleared
+    assert "3 ledger rows are nonconforming" in capsys.readouterr().err
+
+
+def test_timing_result_provenance():
+    from repro.utils.timing import interleaved_timeit
+
+    res = interleaved_timeit({"a": lambda: jnp.zeros(()),
+                              "b": lambda: jnp.ones(())}, iters=2, warmup=1)
+    assert set(res) == {"a", "b"}  # still a plain mapping
+    assert res.iters == 2 and res.warmup == 1
+    assert res.provenance == "min_of_2w1"
+    # clamping: zero iters/warmup are promoted to 1, and recorded as such
+    res0 = interleaved_timeit({"a": lambda: jnp.zeros(())}, iters=0, warmup=0)
+    assert res0.provenance == "min_of_1w1"
