@@ -7,6 +7,16 @@ step counts, kernel launches after empty-rectangle skipping, and the
 zigzag balance spread. They live in BENCH_attn.json so the perf trajectory
 tracks the subsystem; tests/test_ring.py asserts the invariants the numbers
 exhibit (balance <= 1 tile, ring peak KV = 2/P of gather).
+
+ISSUE 9 adds the *scaling model*: an analytic per-device-TFLOPS curve vs
+ring size at fixed per-device tokens, for the double-buffered schedule
+(hop i+1 prefetched under step i's compute: step time = max(compute,
+comm)) against the pre-PR single-buffer one (hop on the critical path:
+compute + comm). Weak-scaling flatness is the whole point of the ring —
+per-device per-step work and hop bytes are both P-independent at fixed
+per-device tokens — so the run ASSERTS double >= single at every P and
+<= 15% droop across the double-buffered curve (the Megatron-style flat
+TFLOPS line, cf. ROADMAP's long-context target).
 """
 
 from __future__ import annotations
@@ -54,3 +64,82 @@ def run(csv):
         for mode, r in rows.items():
             derived = " ".join(f"{k}={v}" for k, v in r.items())
             csv.append(f"ring_accounting/{name}/{mode},,{derived}")
+    _scaling_rows(csv)
+
+
+# --- weak-scaling TFLOPS model (double-buffer vs single-buffer) ------------
+
+# Fixed per-device tokens: S = TOKENS_PER_DEVICE * P. Hardware constants
+# are the DESIGN.md roofline ones (dense-pod chip: peak bf16 matmul and
+# one ICI link's effective bandwidth); the curve's *shape* is what the
+# assertions pin, not the absolute numbers.
+TOKENS_PER_DEVICE = 4096
+RING_SIZES = (2, 4, 8, 16, 32)
+SCALING_HQ, SCALING_HKV, SCALING_D = 32, 8, 128
+SCALING_DTYPE_BYTES = 2  # bf16 KV on the wire
+PEAK_FLOPS = 275e12
+ICI_BYTES_PER_S = 90e9
+SCALING_BQ = SCALING_BK = 512
+
+
+def scaling_model(P: int, spec=MaskSpec(causal=True)):
+    """Analytic per-device TFLOPS of one ring attention forward at ring
+    size P with TOKENS_PER_DEVICE tokens per device.
+
+    Per step t the critical-path compute is the max-over-devices visible
+    tile count (the per-step rebalance target) at the 512x512 model tile;
+    every step but the last also moves one KV shard to the neighbour.
+    double: step = max(compute, comm)  (hop prefetched under compute)
+    single: step = compute + comm      (hop serialized after compute)
+    Returns dict(tflops_double, tflops_single, steps, compute_ms, comm_ms).
+    """
+    S = TOKENS_PER_DEVICE * P
+    layout = rs.make_layout(S, P, spec)
+    per_step = rs.per_step_tile_counts(layout, spec, SCALING_BQ, SCALING_BK)
+    tile_flops = 4 * SCALING_BQ * SCALING_BK * SCALING_D * SCALING_HQ
+    hop_bytes = 2 * (S // P) * SCALING_HKV * SCALING_D * SCALING_DTYPE_BYTES
+    t_hop = hop_bytes / ICI_BYTES_PER_S
+    t_steps = [int(row.max()) * tile_flops / PEAK_FLOPS for row in per_step]
+    T = len(t_steps)
+    t_double = sum(
+        max(tc, t_hop if t < T - 1 else 0.0) for t, tc in enumerate(t_steps)
+    )
+    t_single = sum(
+        tc + (t_hop if t < T - 1 else 0.0) for t, tc in enumerate(t_steps)
+    )
+    # Useful work per device: the balanced share of all visible tiles.
+    useful = per_step.sum() / P * tile_flops
+    return dict(
+        tflops_double=useful / t_double / 1e12,
+        tflops_single=useful / t_single / 1e12,
+        steps=T,
+        compute_ms=sum(t_steps) * 1e3,
+        comm_ms=t_hop * (T - 1) * 1e3,
+    )
+
+
+def _scaling_rows(csv):
+    curve = {P: scaling_model(P) for P in RING_SIZES}
+    for P, m in curve.items():
+        assert m["tflops_double"] >= m["tflops_single"], (
+            f"P={P}: double-buffered model TFLOPS {m['tflops_double']:.1f} "
+            f"below single-buffer {m['tflops_single']:.1f}"
+        )
+        csv.append(
+            f"ring_scaling/causal_n{TOKENS_PER_DEVICE}_p{P},,"
+            f"tflops_double={m['tflops_double']:.1f} "
+            f"tflops_single={m['tflops_single']:.1f} "
+            f"steps={m['steps']} compute_ms={m['compute_ms']:.3f} "
+            f"comm_ms={m['comm_ms']:.3f}"
+        )
+    doubles = [m["tflops_double"] for m in curve.values()]
+    droop = 1.0 - min(doubles) / max(doubles)
+    assert droop <= 0.15, (
+        f"double-buffered weak-scaling curve droops {droop:.1%} > 15% "
+        f"across ring sizes {RING_SIZES}: {[f'{d:.1f}' for d in doubles]}"
+    )
+    csv.append(
+        f"ring_scaling/causal_n{TOKENS_PER_DEVICE}_curve,,"
+        f"droop={droop:.4f} ring_sizes={'/'.join(map(str, RING_SIZES))} "
+        f"tflops_double={'/'.join(f'{d:.1f}' for d in doubles)}"
+    )

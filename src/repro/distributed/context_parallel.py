@@ -32,6 +32,8 @@ from __future__ import annotations
 
 from typing import Optional
 
+import jax
+
 from repro.distributed import sharding as shd
 from repro.distributed.sharding import constrain
 
@@ -43,22 +45,31 @@ def attn_context_mode() -> Optional[str]:
     is just the local kernel); 'gather' is the all-gather 'sequence' mode.
     Outside any sharding context both constraints and routing are no-ops.
 
-    The mode is read at TRACE time. jax's tracing cache keys on function
-    identity + avals, not on this thread-local context: jitting the *same*
-    function object under different rule contexts silently reuses the
-    first context's trace. Use a distinct closure per mode (as train()'s
-    per-run step_fn and examples/long_context.py do).
+    The mode is read at TRACE time, and jax's tracing cache keys on
+    function identity + avals, not on this thread-local context — so a
+    closure traced under one mode would silently replay under another.
+    That reuse is guarded: every trace-time read is recorded
+    (sharding.record_traced_mode) and ``use_rules`` flushes jax's caches
+    whenever the effective mode changes across a context boundary, forcing
+    a retrace (counted as 'sharding/trace_cache_flushes'). Distinct
+    closures per mode (train()'s per-run step_fn) stay the cheap path —
+    they never trigger a flush.
     """
     state = shd.current()
     if state is None:
-        return None
-    mesh, rules = state
-    mode = getattr(rules, "attn_sharding", "heads")
-    if mode == "ring":
-        return "ring" if mesh.shape.get("model", 1) > 1 else None
-    if mode == "sequence":
-        return "gather"
-    return None
+        mode = None
+    else:
+        mesh, rules = state
+        attn = getattr(rules, "attn_sharding", "heads")
+        if attn == "ring":
+            mode = "ring" if mesh.shape.get("model", 1) > 1 else None
+        elif attn == "sequence":
+            mode = "gather"
+        else:
+            mode = None
+    if not jax.core.trace_state_clean():
+        shd.record_traced_mode(mode)
+    return mode
 
 
 def gather_kv(k, v, *, cross: bool = False):

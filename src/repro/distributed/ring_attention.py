@@ -16,18 +16,30 @@ form (DISTFLASHATTN / Sequence Parallelism lineage, DESIGN.md Section 3):
   * Causal masks get **zigzag** sharding (ring_schedule.make_layout) so all
     devices do equal work each step; fully-masked (device, step)
     rectangles are dropped from the static schedule before tracing — no
-    kernel launch, no DMA. Inside a visible rectangle the PR-2 compact tile
-    schedule (built from the rectangle's shifted MaskSpec) skips masked
-    tiles.
-  * The next shard's ``ppermute`` is issued *before* the current step's
-    kernels in the traced program, with no data dependence between them, so
-    the compiler's latency-hiding scheduler can overlap KV rotation with
-    compute.
+    kernel launch, no DMA. Sparse masks (window/sink) additionally get a
+    *rebalanced* itinerary (ring_schedule.visit_order): heavy pairs are
+    packed into the same steps and all-empty tail steps are truncated
+    outright — fewer hops, fewer sync points. Inside a visible rectangle
+    the PR-2 compact tile schedule (built from the rectangle's shifted
+    MaskSpec) skips masked tiles.
+  * **Double buffer, pinned**: step *t*'s kernels read buffer A while step
+    *t+1*'s shard is already in flight into buffer B. Trace order alone
+    does not make that true — the scheduler is free to sink the hop past
+    the step's fusions (and the CPU backend does exactly that) — so
+    ``_prefetch`` pins it with an ``optimization_barrier`` grouping both
+    buffers: the step's compute consumes the barrier's A outputs and the
+    barrier depends on the hop, forcing the collective to be issued before
+    any of the step's compute. tests/test_ring.py asserts the resulting
+    schedule in the compiled HLO, fwd and bwd, the same way it asserts
+    no-all-gathers.
   * Backward is a second ring pass (custom_vjp): each rectangle's
     Algorithm-2 contribution is computed against the *globally merged*
-    (o, lse) residuals (kernels/ops.flash_attention_pallas_shard_bwd);
-    (dK, dV) accumulators travel with their KV shard and arrive home after
-    a full rotation.
+    (o, lse) residuals (kernels/ops.flash_attention_pallas_shard_bwd,
+    f32 out so bf16 inputs don't round-trip per rectangle); (dK, dV)
+    accumulators travel with their KV shard — but on the far side of the
+    compute (they depend on it), so the KV hop is prefetched into its own
+    buffer exactly like the forward, and only the (dK, dV) hop trails the
+    step. A final home hop returns each accumulator to its shard's owner.
 
 Per-device geometry differs (device d owns chunks (d, 2P-1-d)), but a
 shard_map body traces once — the per-device static schedules are dispatched
@@ -202,6 +214,7 @@ def _rect_bwd(q, k, v, o, lse, do, spec: MaskSpec, meta: _RingMeta):
             q, k, v, o, lse, do, spec, scale=meta.scale, block_q=meta.block_q,
             block_kv=meta.block_kv, interpret=meta.interpret,
             schedule=meta.schedule, bwd=meta.bwd, use_tuned=meta.use_tuned,
+            out_dtype=jnp.float32,
         )
     from repro.core.flash import FlashConfig, _bwd_impl
 
@@ -293,9 +306,24 @@ def _dispatch(meta: _RingMeta, branches, *operands):
 # ---------------------------------------------------------------------------
 
 
-def _ring_perm(meta: _RingMeta):
-    P = meta.layout.num_devices
-    return [(i, (i + 1) % P) for i in range(P)]
+def _prefetch(kv, perm, meta: _RingMeta, scope: str):
+    """Issue the next KV hop and *pin* it ahead of this step's compute.
+
+    The explicit double buffer: ``kv`` (buffer A) feeds this step's
+    kernels while the returned ``kv_next`` (buffer B) is already in
+    flight. Trace order alone is a hope, not a guarantee — the backend
+    scheduler may sink the collective past the step's fusions (the CPU
+    backend does). The ``optimization_barrier`` groups both buffers: the
+    step's kernels consume the barrier's A outputs and the barrier
+    depends on the hop, so the collective must be issued before any of
+    the step's compute retires. ``perm=None`` (last step) reuses A.
+    """
+    if perm is None:
+        return kv, kv
+    with jax.named_scope(scope):
+        nxt = jax.lax.ppermute(kv, meta.axis, list(perm))
+    k, v, nk, nv = jax.lax.optimization_barrier((kv[0], kv[1], nxt[0], nxt[1]))
+    return (k, v), (nk, nv)
 
 
 def _local_fwd(q_loc, k_loc, v_loc, *, meta: _RingMeta):
@@ -303,6 +331,8 @@ def _local_fwd(q_loc, k_loc, v_loc, *, meta: _RingMeta):
     shard order; returns (o_loc (B, S/P, Hq, D), lse_loc (B, Hq, S/P) f32),
     also natural order (zigzag conversion happens at the body boundary)."""
     P = meta.layout.num_devices
+    T = rs.num_steps(meta.layout, meta.spec)
+    perms = rs.step_perms(meta.layout, meta.spec)
     q_loc = _shard_to_zigzag(q_loc, meta.axis, meta.layout)
     k_loc = _shard_to_zigzag(k_loc, meta.axis, meta.layout)
     v_loc = _shard_to_zigzag(v_loc, meta.axis, meta.layout)
@@ -310,16 +340,14 @@ def _local_fwd(q_loc, k_loc, v_loc, *, meta: _RingMeta):
     acc_o = jnp.zeros((B, Hq, S_loc, D), jnp.float32)
     acc_lse = jnp.full((B, Hq, S_loc), -jnp.inf, jnp.float32)
     kv = (k_loc, v_loc)
-    for t in range(P):
-        # Issue the rotation before the step's kernels: no data dependence,
-        # so the scheduler can overlap the KV hop with this step's compute.
-        kv_next = (
-            jax.lax.ppermute(kv, meta.axis, _ring_perm(meta))
-            if t < P - 1 else kv
+    for t in range(T):
+        kv, kv_next = _prefetch(
+            kv, perms[t] if t < T - 1 else None, meta, f"ring_fwd_hop{t + 1}"
         )
-        branches = [_step_fwd_branch(meta, d, t) for d in range(P)]
-        o_p, lse_p = _dispatch(meta, branches, q_loc, kv[0], kv[1])
-        acc_o, acc_lse = merge_partials(acc_o, acc_lse, o_p, lse_p)
+        with jax.named_scope(f"ring_fwd_step{t}"):
+            branches = [_step_fwd_branch(meta, d, t) for d in range(P)]
+            o_p, lse_p = _dispatch(meta, branches, q_loc, kv[0], kv[1])
+            acc_o, acc_lse = merge_partials(acc_o, acc_lse, o_p, lse_p)
         kv = kv_next
     o = acc_o.transpose(0, 2, 1, 3).astype(q_loc.dtype)
     return (
@@ -330,10 +358,18 @@ def _local_fwd(q_loc, k_loc, v_loc, *, meta: _RingMeta):
 
 def _local_bwd(q_loc, k_loc, v_loc, o_loc, lse_loc, do_loc, *, meta: _RingMeta):
     """One device's backward ring pass (natural shard order in and out).
-    (dK, dV) accumulators travel with their KV shard; after the full
-    rotation they arrive back on the owning device. Returns (dq, dk, dv)
-    for the local shards, f32."""
+
+    The KV shard is prefetched into its second buffer exactly like the
+    forward (the old combined hop rotated (KV, dKV) together *after* the
+    step's kernels, putting the KV movement on the critical path). The
+    (dK, dV) accumulators genuinely depend on the step's compute, so
+    their hop trails the step — it overlaps the *next* step's kernels,
+    which read the already-prefetched KV, not the accumulators. A final
+    home hop returns each accumulator to its shard's owner. Returns
+    (dq, dk, dv) for the local shards, f32."""
     P = meta.layout.num_devices
+    T = rs.num_steps(meta.layout, meta.spec)
+    perms = rs.step_perms(meta.layout, meta.spec)
     to_zig = functools.partial(_shard_to_zigzag, axis_name=meta.axis, layout=meta.layout)
     q_loc, k_loc, v_loc, o_loc, do_loc = (
         to_zig(x) for x in (q_loc, k_loc, v_loc, o_loc, do_loc)
@@ -342,22 +378,71 @@ def _local_bwd(q_loc, k_loc, v_loc, o_loc, lse_loc, do_loc, *, meta: _RingMeta):
     dq = jnp.zeros(q_loc.shape, jnp.float32)
     kv = (k_loc, v_loc)
     dkv = (jnp.zeros(k_loc.shape, jnp.float32), jnp.zeros(v_loc.shape, jnp.float32))
-    for t in range(P):
-        branches = [_step_bwd_branch(meta, d, t) for d in range(P)]
-        dq_p, dk_p, dv_p = _dispatch(
-            meta, branches, q_loc, kv[0], kv[1], o_loc, lse_loc, do_loc
+    for t in range(T):
+        kv, kv_next = _prefetch(
+            kv, perms[t] if t < T - 1 else None, meta, f"ring_bwd_hop{t + 1}"
         )
-        dq = dq + dq_p
-        dkv = (dkv[0] + dk_p, dkv[1] + dv_p)
-        # (dK, dV) travel on every step (P hops bring each shard's
-        # accumulators home to its owner); K/V itself only needs P-1 hops
-        # -- it is never read after the last compute.
-        if t < P - 1:
-            kv, dkv = jax.lax.ppermute((kv, dkv), meta.axis, _ring_perm(meta))
-        else:
-            dkv = jax.lax.ppermute(dkv, meta.axis, _ring_perm(meta))
+        with jax.named_scope(f"ring_bwd_step{t}"):
+            branches = [_step_bwd_branch(meta, d, t) for d in range(P)]
+            dq_p, dk_p, dv_p = _dispatch(
+                meta, branches, q_loc, kv[0], kv[1], o_loc, lse_loc, do_loc
+            )
+            dq = dq + dq_p
+            dkv = (dkv[0] + dk_p, dkv[1] + dv_p)
+        perm_out = perms[t] if t < T - 1 else rs.home_perm(meta.layout, meta.spec)
+        with jax.named_scope(f"ring_bwd_dkv_hop{t}"):
+            dkv = jax.lax.ppermute(dkv, meta.axis, list(perm_out))
+        kv = kv_next
     from_zig = functools.partial(_zigzag_to_shard, axis_name=meta.axis, layout=meta.layout)
     return from_zig(dq), from_zig(dkv[0]), from_zig(dkv[1])
+
+
+# ---------------------------------------------------------------------------
+# Telemetry (host-side, trace time — mirrors kernels/ops.count_knob: each
+# jit trace counts once, cached executions don't re-resolve)
+# ---------------------------------------------------------------------------
+
+_RING_TRACE_TID = 3  # dedicated Perfetto track for ring-schedule structure
+
+
+def _record_ring_pass(meta: _RingMeta, k, *, backward: bool) -> None:
+    """Count one ring pass into the default registry and, when a default
+    TraceRecorder is installed (launch/train.py --trace-out), emit its
+    per-step span structure so an overlap/truncation regression (extra
+    steps, fatter hops, lost empty-step skips) is visible in the Perfetto
+    output next to the train-step spans."""
+    from repro.obs.metrics import default_registry
+    from repro.obs.trace import get_default_recorder
+
+    layout, spec = meta.layout, meta.spec
+    T = rs.num_steps(layout, spec)
+    kv_heads, head_dim = k.shape[2], k.shape[3]
+    hop_bytes = rs.comm_bytes_per_device(
+        layout, kv_heads, head_dim, jnp.dtype(k.dtype).itemsize,
+        backward=backward, spec=spec,
+    )
+    reg = default_registry()
+    reg.counter("ring/steps").inc(T)
+    reg.counter("ring/hop_bytes").inc(hop_bytes)
+    reg.counter("ring/empty_steps_skipped").inc(rs.empty_slot_count(layout, spec))
+    rec = get_default_recorder()
+    if rec is None:
+        return
+    name = "ring_bwd" if backward else "ring_fwd"
+    bq, bk = meta.block_q or 128, meta.block_kv or 128
+    tiles = rs.per_step_tile_counts(layout, spec, bq, bk)
+    rec.name_thread(_RING_TRACE_TID, "ring schedule")
+    with rec.span(name, tid=_RING_TRACE_TID,
+                  args={"steps": T, "devices": layout.num_devices,
+                        "hop_bytes_per_device": hop_bytes}):
+        for t in range(T):
+            if t < T - 1:
+                rec.instant(f"{name}_hop{t + 1}", tid=_RING_TRACE_TID,
+                            args={"in_flight_during_step": t})
+            with rec.span(f"{name}_step{t}", tid=_RING_TRACE_TID,
+                          args={"max_tiles": int(tiles[t].max()),
+                                "tiles_per_device": tiles[t].tolist()}):
+                pass
 
 
 # ---------------------------------------------------------------------------
@@ -393,6 +478,7 @@ def _ring_vjp_fwd(q, k, v, meta: _RingMeta):
 
 def _ring_vjp_bwd(meta: _RingMeta, res, do):
     q, k, v, o, lse = res
+    _record_ring_pass(meta, k, backward=True)
     seq, lse_spec = _specs(meta)
     dq, dk, dv = shd.shard_map(
         functools.partial(_local_bwd, meta=meta), meta.mesh,
@@ -484,4 +570,5 @@ def ring_flash_attention(
         interpret=interpret, schedule=schedule, bwd=bwd,
         num_q_bands=num_q_bands, kv_splits=kv_splits, use_tuned=use_tuned,
     )
+    _record_ring_pass(meta, k, backward=False)
     return _ring(q, k, v, meta)

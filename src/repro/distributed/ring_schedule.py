@@ -11,6 +11,14 @@ holds one Q shard forever and the KV shards rotate around the ring
     device sees the same visible-tile count under a causal mask (the early
     chunk's small triangle pairs with the late chunk's big one). Trivial
     masks use plain contiguous sharding (1 chunk per device, no reorder).
+  * ``visit_order`` — the per-device shard itinerary: ``visit[d][t]`` is the
+    KV shard device ``d`` computes against at step ``t``. Dense masks (full,
+    causal — every (device, shard) pair has work) use the plain rotation
+    ``(d - t) % P``. Sparse masks (window/sink leave whole pairs empty) get
+    a *rebalanced* itinerary: a Latin-square-style greedy matching packs the
+    heavy pairs into the same early steps, so no step is serialized on one
+    straggler device, and steps past the last one with any work anywhere are
+    TRUNCATED — fewer hops, fewer synchronization points, less comm.
   * ``step_pairs`` — the static schedule for device ``d`` at ring step ``t``:
     which (q_chunk, kv_chunk) rectangles are visible, and the per-rectangle
     ``MaskSpec`` whose ``q_offset`` shifts local coordinates back to global
@@ -21,8 +29,11 @@ holds one Q shard forever and the KV shards rotate around the ring
     rectangle's spec) skips the masked tiles: the mesh-level skip and the
     grid-level skip are the same oracle at two granularities.
   * accounting — per-device visible-tile counts (the zigzag balance
-    invariant, asserted by tests/test_ring.py) and comms/memory byte counts
-    for the ring-vs-all-gather tradeoff table (benchmarks/ring_accounting).
+    invariant, asserted by tests/test_ring.py), the per-*step* counts the
+    tail-rebalance is judged by (``per_step_tile_counts``: the max over
+    devices at each step is what a synchronized ring actually waits on),
+    and comms/memory byte counts for the ring-vs-all-gather tradeoff table
+    (benchmarks/ring_accounting).
 
 Everything here is host-side python/numpy over *static* shapes; nothing is
 traced. ``distributed/ring_attention.py`` consumes it.
@@ -31,6 +42,7 @@ traced. ``distributed/ring_attention.py`` consumes it.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, NamedTuple, Tuple
 
 import numpy as np
@@ -102,11 +114,11 @@ class StepPair(NamedTuple):
 
 
 def kv_origin(layout: RingLayout, d: int, t: int) -> int:
-    """Device whose KV shard device ``d`` holds at ring step ``t``.
-
-    The rotation sends each shard to the next device every step
-    (``ppermute`` perm ``i -> (i+1) % P``), so after ``t`` steps device
-    ``d`` holds the shard that started on ``(d - t) % P``.
+    """Shard id device ``d`` would hold at step ``t`` under the *plain
+    rotation* (``ppermute`` perm ``i -> (i+1) % P``: after ``t`` steps
+    device ``d`` holds the shard that started on ``(d - t) % P``). The
+    actual itinerary is :func:`visit_order`, which equals this rotation for
+    dense masks and a rebalanced Latin square for sparse ones.
     """
     return (d - t) % layout.num_devices
 
@@ -124,13 +136,11 @@ def _pair_spec(spec: MaskSpec, q_chunk: int, kv_chunk: int, C: int) -> MaskSpec:
     return dataclasses.replace(spec, q_offset=q_off, sink=sink)
 
 
-def step_pairs(layout: RingLayout, spec: MaskSpec, d: int, t: int) -> List[StepPair]:
-    """Static schedule for device ``d`` at ring step ``t``: the visible
-    (q_chunk, kv_chunk) rectangles against the shard from
-    ``kv_origin(layout, d, t)``. Empty rectangles are dropped — a step whose
-    list is empty launches no kernels."""
+def pair_rects(layout: RingLayout, spec: MaskSpec, d: int, e: int) -> List[StepPair]:
+    """Visible rectangles of device ``d``'s Q chunks against shard ``e``'s
+    KV chunks (step-independent: a (device, shard) pair has the same work
+    whichever step the itinerary schedules it at)."""
     C = layout.chunk
-    e = kv_origin(layout, d, t)
     pairs: List[StepPair] = []
     for a, cq in enumerate(layout.device_chunks(d)):
         q_lo = spec.q_offset + cq * C
@@ -140,6 +150,158 @@ def step_pairs(layout: RingLayout, spec: MaskSpec, d: int, t: int) -> List[StepP
                 continue
             pairs.append(StepPair(a, b, cq, ck, _pair_spec(spec, cq, ck, C)))
     return pairs
+
+
+def pair_tiles(layout: RingLayout, spec: MaskSpec, d: int, e: int,
+               bq: int = 128, bk: int = 128) -> int:
+    """Visible (bq x bk) tile count of the (device d, shard e) pair — the
+    work weight the tail-rebalance packs by."""
+    from repro.core.flash import _visible_pairs
+
+    C = layout.chunk
+    bq, bk = min(bq, C), min(bk, C)
+    t_q = -(-C // bq)
+    t_kv = -(-C // bk)
+    return sum(
+        len(_visible_pairs(p.spec, t_q, t_kv, bq, bk)[0])
+        for p in pair_rects(layout, spec, d, e)
+    )
+
+
+def _assignment(cost: List[List[int]]) -> List[int]:
+    """Min-cost perfect assignment (Hungarian, O(P^3)): returns the shard
+    assigned to each device. P is a ring size (tens), so cubic is free."""
+    n = len(cost)
+    INF = float("inf")
+    u = [0.0] * (n + 1)
+    v = [0.0] * (n + 1)
+    p = [0] * (n + 1)   # p[j]: row matched to column j (1-based; 0 = none)
+    way = [0] * (n + 1)
+    for i in range(1, n + 1):
+        p[0] = i
+        j0 = 0
+        minv = [INF] * (n + 1)
+        used = [False] * (n + 1)
+        while True:
+            used[j0] = True
+            i0, delta, j1 = p[j0], INF, 0
+            for j in range(1, n + 1):
+                if used[j]:
+                    continue
+                cur = cost[i0 - 1][j - 1] - u[i0] - v[j]
+                if cur < minv[j]:
+                    minv[j], way[j] = cur, j0
+                if minv[j] < delta:
+                    delta, j1 = minv[j], j
+            for j in range(n + 1):
+                if used[j]:
+                    u[p[j]] += delta
+                    v[j] -= delta
+                else:
+                    minv[j] -= delta
+            j0 = j1
+            if p[j0] == 0:
+                break
+        while j0:
+            j1 = way[j0]
+            p[j0] = p[j1]
+            j0 = j1
+    out = [0] * n
+    for j in range(1, n + 1):
+        out[p[j] - 1] = j - 1
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def visit_order(layout: RingLayout, spec: MaskSpec) -> Tuple[Tuple[int, ...], ...]:
+    """Per-device shard itinerary: ``visit[d][t]`` = shard at device ``d``
+    on step ``t``. Row 0..P-1, T columns (T <= P); every column is a
+    permutation of the shards (realizable by ppermutes), every row visits a
+    shard at most once, and every (device, shard) pair with visible work
+    appears in its device's row.
+
+    Dense masks return the plain rotation (T = P): it is already per-step
+    balanced under causal zigzag (work(d, e) depends only on chunk
+    geometry, and each rotation step pairs one heavy diagonal with P-1
+    equal off-diagonals). Sparse masks (window/sink) leave whole pairs
+    empty; there the greedy heaviest-first matching packs heavy pairs into
+    the same step (the per-step max over devices is what the synchronized
+    ring waits on) and drops all-empty trailing steps entirely.
+    """
+    P = layout.num_devices
+    rotation = tuple(tuple((d - t) % P for t in range(P)) for d in range(P))
+    if P == 1:
+        return rotation
+    weight = [[pair_tiles(layout, spec, d, e) for e in range(P)] for d in range(P)]
+    if all(weight[d][e] > 0 for d in range(P) for e in range(P)):
+        return rotation
+    # Step 0 is always the home shard (its diagonal rectangle is visible
+    # under every supported mask family, and it is resident — no hop).
+    cols = [list(range(P))]
+    visited = [{d} for d in range(P)]
+    needed = [{e for e in range(P) if weight[d][e] > 0 and e != d}
+              for d in range(P)]
+    # Each column is the max-weight perfect matching over not-yet-visited
+    # pairs, with needed pairs weighted NEED + tiles and padding pairs 0:
+    # a step packs as many nonempty pairs as possible (NEED dominates) and
+    # groups the heaviest together (the per-step max over devices is the
+    # step's latency). Feasibility: after t perfect-matching columns the
+    # unvisited graph is (P - t)-regular bipartite, every edge of which
+    # lies in some perfect matching — forbidden pairs are never forced and
+    # each column covers at least one needed pair while any remain.
+    NEED, FORBID = 10 ** 12, 10 ** 18
+    while any(needed) and len(cols) < P:
+        cost = [
+            [FORBID if e in visited[d]
+             else -(NEED + weight[d][e]) if e in needed[d] else 0
+             for e in range(P)]
+            for d in range(P)
+        ]
+        col = _assignment(cost)
+        cols.append(col)
+        for d in range(P):
+            visited[d].add(col[d])
+            needed[d].discard(col[d])
+    return tuple(tuple(cols[t][d] for t in range(len(cols))) for d in range(P))
+
+
+def num_steps(layout: RingLayout, spec: MaskSpec) -> int:
+    """Ring steps actually run (T <= P; < P when the rebalanced itinerary
+    truncates all-empty tail steps of a sparse mask)."""
+    return len(visit_order(layout, spec)[0])
+
+
+def step_perms(
+    layout: RingLayout, spec: MaskSpec
+) -> Tuple[Tuple[Tuple[int, int], ...], ...]:
+    """The T-1 ``ppermute`` permutations realizing :func:`visit_order`:
+    ``step_perms[t]`` moves each shard from its step-``t`` host to its
+    step-``t+1`` host (for the rotation itinerary every entry is the plain
+    ``i -> (i+1) % P`` ring hop)."""
+    visit = visit_order(layout, spec)
+    P = layout.num_devices
+    T = len(visit[0])
+    at = [{visit[d][t]: d for d in range(P)} for t in range(T)]  # shard->host
+    return tuple(
+        tuple(sorted((at[t][e], at[t + 1][e]) for e in range(P)))
+        for t in range(T - 1)
+    )
+
+
+def home_perm(layout: RingLayout, spec: MaskSpec) -> Tuple[Tuple[int, int], ...]:
+    """The final ``ppermute`` sending each traveling (dK, dV) accumulator
+    from its last-step host back to the device that owns its KV shard."""
+    visit = visit_order(layout, spec)
+    P = layout.num_devices
+    return tuple(sorted((d, visit[d][-1]) for d in range(P)))
+
+
+def step_pairs(layout: RingLayout, spec: MaskSpec, d: int, t: int) -> List[StepPair]:
+    """Static schedule for device ``d`` at ring step ``t``: the visible
+    (q_chunk, kv_chunk) rectangles against the shard ``visit_order`` routes
+    there. Empty rectangles are dropped — a step whose list is empty
+    launches no kernels."""
+    return pair_rects(layout, spec, d, visit_order(layout, spec)[d][t])
 
 
 def uniform_steps(layout: RingLayout, spec: MaskSpec) -> bool:
@@ -154,6 +316,28 @@ def uniform_steps(layout: RingLayout, spec: MaskSpec) -> bool:
 # ---------------------------------------------------------------------------
 
 
+def per_step_tile_counts(
+    layout: RingLayout, spec: MaskSpec, bq: int, bk: int
+) -> np.ndarray:
+    """(T, P) visible-tile counts: entry [t, d] is device ``d``'s work at
+    step ``t``. The ring synchronizes at each hop, so step ``t``'s latency
+    is ``max(counts[t])`` — the per-*step* balance the tail-rebalance
+    optimizes, strictly stronger than the per-device row sums of
+    :func:`visible_tile_counts`."""
+    from repro.core.flash import _visible_pairs
+
+    C = layout.chunk
+    t_q = -(-C // bq)
+    t_kv = -(-C // bk)
+    T = num_steps(layout, spec)
+    counts = np.zeros((T, layout.num_devices), np.int64)
+    for d in range(layout.num_devices):
+        for t in range(T):
+            for pair in step_pairs(layout, spec, d, t):
+                counts[t, d] += len(_visible_pairs(pair.spec, t_q, t_kv, bq, bk)[0])
+    return counts
+
+
 def visible_tile_counts(
     layout: RingLayout, spec: MaskSpec, bq: int, bk: int
 ) -> np.ndarray:
@@ -164,17 +348,7 @@ def visible_tile_counts(
     (tests/test_ring.py asserts max - min <= 1). Uses the same
     ``_visible_pairs`` oracle the kernel schedules are checked against.
     """
-    from repro.core.flash import _visible_pairs
-
-    C = layout.chunk
-    t_q = -(-C // bq)
-    t_kv = -(-C // bk)
-    counts = np.zeros(layout.num_devices, np.int64)
-    for d in range(layout.num_devices):
-        for t in range(layout.num_devices):
-            for pair in step_pairs(layout, spec, d, t):
-                counts[d] += len(_visible_pairs(pair.spec, t_q, t_kv, bq, bk)[0])
-    return counts
+    return per_step_tile_counts(layout, spec, bq, bk).sum(axis=0)
 
 
 def kernel_launch_counts(layout: RingLayout, spec: MaskSpec) -> np.ndarray:
@@ -182,31 +356,47 @@ def kernel_launch_counts(layout: RingLayout, spec: MaskSpec) -> np.ndarray:
     pass (a fully-masked step contributes zero — the 'skip without
     launching' claim in numbers)."""
     P = layout.num_devices
+    T = num_steps(layout, spec)
     return np.asarray(
-        [sum(len(step_pairs(layout, spec, d, t)) for t in range(P)) for d in range(P)],
+        [sum(len(step_pairs(layout, spec, d, t)) for t in range(T)) for d in range(P)],
         np.int64,
     )
 
 
+def empty_slot_count(layout: RingLayout, spec: MaskSpec) -> int:
+    """(device, step) slots of the *full rotation* grid that launch no
+    kernels under the rebalanced itinerary: per-step empty slots within the
+    T run steps plus the P per-device slots of each truncated step. The
+    ``ring/empty_steps_skipped`` obs counter reports this."""
+    P = layout.num_devices
+    T = num_steps(layout, spec)
+    empty = sum(
+        1 for d in range(P) for t in range(T)
+        if not step_pairs(layout, spec, d, t)
+    )
+    return empty + P * (P - T)
+
+
 def comm_bytes_per_device(
     layout: RingLayout, kv_heads: int, head_dim: int, dtype_bytes: int,
-    *, backward: bool = False,
+    *, backward: bool = False, spec: MaskSpec = None,
 ) -> int:
     """Bytes each device *sends* for one attention call's KV movement.
 
-    Forward ring: P-1 rotations of the local (K, V) shard. Backward ring:
-    P-1 (K, V) rotations plus P hops of the traveling f32 (dK, dV)
-    accumulators (the extra hop brings them home). The all-gather baseline
-    moves the same P-1 shards per device in one collective — the ring's
-    win is peak memory (2 shards resident instead of P) and compute/comms
-    overlap, not total bytes; see ``gather_bytes_per_device``.
+    Forward ring: T-1 rotations of the local (K, V) shard (T = P for dense
+    masks; a truncated sparse itinerary hops less). Backward ring: T-1
+    (K, V) rotations plus T hops of the traveling f32 (dK, dV) accumulators
+    (the extra hop brings them home). The all-gather baseline moves the
+    same P-1 shards per device in one collective — the ring's win is peak
+    memory (2 shards resident instead of P) and compute/comms overlap, not
+    total bytes; see ``gather_bytes_per_device``.
     """
     shard = 2 * layout.shard_len * kv_heads * head_dim * dtype_bytes  # K + V
-    P = layout.num_devices
+    T = layout.num_devices if spec is None else num_steps(layout, spec)
     if not backward:
-        return (P - 1) * shard
+        return (T - 1) * shard
     dkv = 2 * layout.shard_len * kv_heads * head_dim * 4  # f32 accumulators
-    return (P - 1) * shard + P * dkv
+    return (T - 1) * shard + T * dkv
 
 
 def gather_bytes_per_device(

@@ -54,17 +54,22 @@ def lm_rules(
     fsdp: bool = True,
     pods: bool = False,
     model_axis: int = 16,
+    data_axis: int = 16,
     decode: bool = False,
     batch_size: int = 0,
 ) -> ShardingRules:
     """Build the rule table for one arch on the (pod?, data, model) mesh.
 
-    Divisibility-aware: kv heads / experts that don't divide the model axis
-    fall back to replication (kv) or per-expert-FFN sharding (MoE); archs
-    whose q heads don't divide use attn_sharding='sequence' (context
-    parallelism) or 'ring' (the same activation layout with rotating KV
-    shards). batch=1 decode (long_500k) leaves `data` to the KV-seq split
-    instead of the batch.
+    The mesh is 2D (``data`` x ``model``): the ring / sequence context
+    parallelism runs over ``model`` *inside each* data-parallel group, and
+    the table carries both axes (batch over ``data``, seq over ``model``)
+    so the trainer composes them freely (train.py --data-axis
+    --model-axis). Divisibility-aware: kv heads / experts that don't
+    divide the model axis fall back to replication (kv) or per-expert-FFN
+    sharding (MoE); archs whose q heads don't divide use
+    attn_sharding='sequence' (context parallelism) or 'ring' (the same
+    activation layout with rotating KV shards). batch=1 decode (long_500k)
+    leaves `data` to the KV-seq split instead of the batch.
     """
     if cfg is not None:
         attn_sharding = cfg.attn_sharding
@@ -74,7 +79,7 @@ def lm_rules(
         has_ssm = cfg.ssm is not None
         # FSDP over data*model on the embed dim needs d_model divisible by
         # the full product (gemma3: 1152 % 256 != 0 -> fall back to data).
-        embed_2d_ok = cfg.d_model % (model_axis * 16) == 0
+        embed_2d_ok = cfg.d_model % (model_axis * data_axis) == 0
     else:
         kv_ok = heads_ok = True
         experts_ok = True
@@ -86,7 +91,9 @@ def lm_rules(
     heads_ax = None if seqsh or not heads_ok else "model"
     kv_ax = None if seqsh or not kv_ok else "model"
     batch = (("pod", "data") if pods else ("data",))
-    batch_ok = batch_size == 0 or batch_size % (2 * 16 if pods else 16) == 0
+    batch_ok = batch_size == 0 or batch_size % (
+        2 * data_axis if pods else data_axis
+    ) == 0
     if not batch_ok:  # batch=1 long-context decode
         batch = ("pod",) if pods and batch_size % 2 == 0 else None
     # decode caches are always sequence-split (split-KV / context-parallel
@@ -125,14 +132,62 @@ def lm_rules(
     return ShardingRules(t, attn_sharding=attn_sharding)
 
 
+# --- trace-cache staleness guard -------------------------------------------
+#
+# attn_context_mode() is read at TRACE time, but jax's jit cache keys on
+# function identity + avals, not on this thread-local context: jitting the
+# *same* closure under a different rule context would silently replay the
+# first context's trace (wrong collectives, or none). The guard records
+# which effective mode each trace consulted and flushes jax's caches at
+# every use_rules boundary where the effective mode changes, forcing a
+# retrace under the new rules. Process-wide (jax caches are process-wide).
+
+_traced_modes: set = set()
+
+
+def _mode_of(state) -> Optional[str]:
+    """Effective context-parallel mode of a (mesh, rules) state (or None).
+
+    Mirrors context_parallel.attn_context_mode, which cannot be imported
+    here (it imports this module)."""
+    if state is None:
+        return None
+    mesh, rules = state
+    mode = getattr(rules, "attn_sharding", "heads")
+    if mode == "ring":
+        return "ring" if mesh.shape.get("model", 1) > 1 else None
+    if mode == "sequence":
+        return "gather"
+    return None
+
+
+def record_traced_mode(mode: Optional[str]) -> None:
+    """Note that attn_context_mode was consulted while tracing (mode baked
+    into some cached trace). Called by context_parallel, not user code."""
+    _traced_modes.add(mode)
+
+
+def _flush_stale_traces(state) -> None:
+    mode = _mode_of(state)
+    if _traced_modes and any(m != mode for m in _traced_modes):
+        jax.clear_caches()
+        _traced_modes.clear()
+        from repro.obs.metrics import default_registry
+
+        default_registry().counter("sharding/trace_cache_flushes").inc()
+
+
 @contextlib.contextmanager
 def use_rules(mesh: Mesh, rules: ShardingRules):
     prev = getattr(_ctx, "state", None)
-    _ctx.state = (mesh, rules)
+    state = (mesh, rules)
+    _flush_stale_traces(state)
+    _ctx.state = state
     try:
         yield
     finally:
         _ctx.state = prev
+        _flush_stale_traces(prev)
 
 
 def current() -> Optional[Tuple[Mesh, ShardingRules]]:

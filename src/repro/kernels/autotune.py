@@ -44,7 +44,7 @@ than ``--tol`` slower than a fresh winner.
 CLI::
 
     python -m repro.kernels.autotune [--out PATH] [--smoke] [--check]
-        [--iters N] [--tol F] [--shapes seq:heads:hd:causal:batch,...]
+        [--iters N] [--tol F] [--shapes seq:heads:hd:causal:batch[:dtype],...]
 """
 
 from __future__ import annotations
@@ -515,8 +515,9 @@ def sweep_paged_decode_shape(
 # tokens, 4 heads, head dim 64; flash_pallas rows run seq <= 512, the
 # bwd_cmp/kernel-layer rows run causal seq 1024/2048) plus the decode
 # serving shapes. Each is (kind, seq, heads, head_dim, causal, batch) with
-# an optional trailing page_size for kind == "paged_decode" (seq is then
-# the logical capacity n_pages * page_size).
+# optional trailing fields: an int is the page_size for
+# kind == "paged_decode" (seq is then the logical capacity
+# n_pages * page_size), a str is the dtype (default float32).
 BENCH_SHAPES: Tuple[Tuple, ...] = (
     ("attn", 256, 4, 64, False, 16),
     ("attn", 256, 4, 64, True, 16),
@@ -524,6 +525,13 @@ BENCH_SHAPES: Tuple[Tuple, ...] = (
     ("attn", 512, 4, 64, True, 8),
     ("attn", 1024, 4, 64, True, 4),
     ("attn", 2048, 4, 64, True, 2),
+    # ISSUE 9: ring-shard geometries. The ring's rectangle kernels resolve
+    # knobs at the per-chunk seq (S / 2P) in the run's compute dtype;
+    # bf16 is what long-context training keeps KV in on the wire, and the
+    # ring's off-diagonal rectangles are *non*-causal.
+    ("attn", 512, 4, 64, True, 8, "bfloat16"),
+    ("attn", 512, 4, 64, False, 8, "bfloat16"),
+    ("attn", 1024, 4, 64, True, 4, "bfloat16"),
     ("decode", 512, 4, 64, True, 4),
     ("paged_decode", 512, 4, 64, True, 4, 64),
 )
@@ -532,28 +540,43 @@ BENCH_SHAPES: Tuple[Tuple, ...] = (
 SMOKE_SHAPES: Tuple[Tuple, ...] = (
     ("attn", 128, 2, 32, True, 2),
     ("attn", 128, 2, 32, False, 2),
+    ("attn", 128, 2, 32, True, 2, "bfloat16"),
     ("decode", 128, 2, 32, True, 2),
     ("paged_decode", 128, 2, 32, True, 2, 32),
 )
 
 
+def _shape_extras(extras) -> Tuple[Optional[int], str]:
+    """Optional trailing shape-tuple fields -> (page_size, dtype).
+
+    Order-free by type: an int is a page size, a str is a dtype name."""
+    page, dtype = None, "float32"
+    for x in extras:
+        if isinstance(x, str):
+            dtype = x
+        else:
+            page = int(x)
+    return page, dtype
+
+
 def _sweep_one(kind_shape, iters, log):
     kind, seq, heads, hd, causal, batch = kind_shape[:6]
-    page = kind_shape[6] if len(kind_shape) > 6 else None
+    page, dtype = _shape_extras(kind_shape[6:])
     if log:
         log(f"sweep {kind} seq={seq} heads={heads} hd={hd} "
-            f"causal={int(causal)} batch={batch}"
+            f"causal={int(causal)} batch={batch} dtype={dtype}"
             + (f" page={page}" if page else ""))
     if kind == "paged_decode":
         return sweep_paged_decode_shape(seq=seq, heads=heads, head_dim=hd,
                                         page_size=page, batch=batch,
-                                        iters=iters, log=log)
+                                        dtype=dtype, iters=iters, log=log)
     if kind == "decode":
         return sweep_decode_shape(seq=seq, heads=heads, head_dim=hd,
-                                  batch=batch, iters=iters, log=log)
+                                  batch=batch, dtype=dtype, iters=iters,
+                                  log=log)
     return sweep_attention_shape(seq=seq, heads=heads, head_dim=hd,
-                                 causal=causal, batch=batch, iters=iters,
-                                 log=log)
+                                 causal=causal, batch=batch, dtype=dtype,
+                                 iters=iters, log=log)
 
 
 def run_sweep(shapes, *, iters: int = 3, backend: Optional[str] = None,
@@ -600,11 +623,12 @@ def check_cache(shapes, *, path: Optional[str] = None, iters: int = 3,
     failures: List[str] = []
     for kind_shape in shapes:
         kind, seq, heads, hd, causal, batch = kind_shape[:6]
-        page = kind_shape[6] if len(kind_shape) > 6 else None
+        page, dtype = _shape_extras(kind_shape[6:])
+        dt = jnp.dtype(dtype)
         impl = ("flash_pallas" if kind == "attn"
                 else f"flash_decode_paged{page}" if kind == "paged_decode"
                 else "flash_decode")
-        key = cache_key(impl, causal, seq, heads, hd, "float32")
+        key = cache_key(impl, causal, seq, heads, hd, dt)
         committed = doc["entries"].get(key)
         if committed is None:
             failures.append(f"missing committed entry for {key}")
@@ -617,7 +641,7 @@ def check_cache(shapes, *, path: Optional[str] = None, iters: int = 3,
         fresh_knobs = {k: v for k, v in fresh.items()
                        if k in knob_names and v is not None}
         if kind == "paged_decode":
-            args = _paged_fixture(seq, heads, hd, batch, page, jnp.float32)
+            args = _paged_fixture(seq, heads, hd, batch, page, dt)
 
             def _mk(kn):
                 return jax.jit(
@@ -625,9 +649,9 @@ def check_cache(shapes, *, path: Optional[str] = None, iters: int = 3,
                         q, kp, vp, lens, tbl, **kn)[0])
         elif kind == "decode":
             kq, kk, kv = jax.random.split(jax.random.PRNGKey(1), 3)
-            q = jax.random.normal(kq, (batch, 1, heads, hd), jnp.float32)
-            kc = jax.random.normal(kk, (batch, seq, heads, hd), jnp.float32)
-            vc = jax.random.normal(kv, (batch, seq, heads, hd), jnp.float32)
+            q = jax.random.normal(kq, (batch, 1, heads, hd), jnp.float32).astype(dt)
+            kc = jax.random.normal(kk, (batch, seq, heads, hd), jnp.float32).astype(dt)
+            vc = jax.random.normal(kv, (batch, seq, heads, hd), jnp.float32).astype(dt)
             args = (q, kc, vc, jnp.full((batch,), seq, jnp.int32))
 
             def _mk(kn):
@@ -637,7 +661,8 @@ def check_cache(shapes, *, path: Optional[str] = None, iters: int = 3,
             spec = MaskSpec(causal=causal)
             ks = jax.random.split(jax.random.PRNGKey(0), 3)
             args = tuple(jax.random.normal(k_, (batch, seq, heads, hd),
-                                           jnp.float32) for k_ in ks)
+                                           jnp.float32).astype(dt)
+                         for k_ in ks)
             # fwd-time check; bwd is staged separately in the sweep
             knobs.pop("bwd", None)
             fresh_knobs.pop("bwd", None)
@@ -669,8 +694,13 @@ def check_cache(shapes, *, path: Optional[str] = None, iters: int = 3,
 def _parse_shapes(text: str):
     shapes = []
     for part in text.split(","):
-        seq, heads, hd, causal, batch = (int(x) for x in part.split(":"))
-        shapes.append(("attn", seq, heads, hd, bool(causal), batch))
+        fields = part.split(":")
+        dtype = None
+        if fields and not fields[-1].lstrip("-").isdigit():
+            dtype = fields.pop()
+        seq, heads, hd, causal, batch = (int(x) for x in fields)
+        shape = ("attn", seq, heads, hd, bool(causal), batch)
+        shapes.append(shape + ((dtype,) if dtype else ()))
     return shapes
 
 
@@ -686,7 +716,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--iters", type=int, default=3)
     p.add_argument("--tol", type=float, default=0.25)
     p.add_argument("--shapes", default=None,
-                   help="seq:heads:hd:causal:batch[,...] (attention shapes)")
+                   help="seq:heads:hd:causal:batch[:dtype][,...] "
+                        "(attention shapes; dtype defaults to float32)")
     args = p.parse_args(argv)
     shapes = (_parse_shapes(args.shapes) if args.shapes
               else SMOKE_SHAPES if args.smoke

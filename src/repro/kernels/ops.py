@@ -618,6 +618,7 @@ def flash_attention_pallas_shard_bwd(
     block_q: Optional[int] = None, block_kv: Optional[int] = None,
     interpret: Optional[bool] = None, schedule: Optional[str] = None,
     bwd: Optional[str] = None, use_tuned: Optional[bool] = None,
+    out_dtype=None,
 ):
     """Shard-local Algorithm 2 against an externally merged (o, lse).
 
@@ -635,9 +636,11 @@ def flash_attention_pallas_shard_bwd(
 
     There is no ``custom_vjp`` here on purpose — the caller IS a vjp; this
     is a direct kernel entry on one shard pair. Returns (dq, dk, dv) in the
-    input dtypes (ring accumulates them in f32). ``bwd="fused"`` runs the
-    rectangle as ONE kernel launch (ring training inherits the fused win);
-    ``"split"`` keeps the 3-launch baseline.
+    input dtypes, or in ``out_dtype`` when given — the ring passes f32 so
+    its traveling (dK, dV) accumulators fold in each rectangle's
+    contribution without a lossy round-trip through the bf16 input dtype.
+    ``bwd="fused"`` runs the rectangle as ONE kernel launch (ring training
+    inherits the fused win); ``"split"`` keeps the 3-launch baseline.
     """
     cfg = PallasFlashConfig(
         spec=spec, block_q=block_q, block_kv=block_kv, scale=scale,
@@ -659,7 +662,11 @@ def flash_attention_pallas_shard_bwd(
                          m["B"], m["Hq"])
     dk = _unheads_layout(dkh[:, : m["Sk"]], m["B"], m["Hk"])
     dv = _unheads_layout(dvh[:, : m["Sk"]], m["B"], m["Hk"])
-    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+    return (
+        dq.astype(out_dtype or q.dtype),
+        dk.astype(out_dtype or k.dtype),
+        dv.astype(out_dtype or v.dtype),
+    )
 
 
 def flash_decode_pallas(

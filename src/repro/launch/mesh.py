@@ -38,8 +38,24 @@ def make_host_mesh(model_axis: int = 1):
     return jax.make_mesh((data, model_axis), ("data", "model"))
 
 
-def make_long_context_mesh():
-    """All visible devices on the 'model' axis (data=1): the layout for
-    context-parallel / ring-attention runs where one long sequence is the
-    whole workload (examples/long_context.py, ring benchmarks)."""
-    return make_host_mesh(model_axis=len(jax.devices()))
+def make_long_context_mesh(data: int = 1, model: int = None):
+    """2D (data x ring) mesh for long-context runs: ring context
+    parallelism over ``model`` *inside each of* ``data`` data-parallel /
+    FSDP groups. The default (data=1, model=all devices) is the
+    single-group layout where one long sequence is the whole workload
+    (examples/long_context.py, ring benchmarks); ``train.py --data-axis
+    N --model-axis M`` builds the composed mesh so the trainer scales
+    past one model-axis group."""
+    n = len(jax.devices())
+    if model is None:
+        if data <= 0 or n % data != 0:
+            raise ValueError(
+                f"data={data} does not divide the {n} visible devices "
+                "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+            )
+        model = n // data
+    if data * model != n:
+        raise ValueError(
+            f"mesh (data={data}) x (model={model}) != {n} visible devices"
+        )
+    return jax.make_mesh((data, model), ("data", "model"))

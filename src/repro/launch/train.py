@@ -66,11 +66,16 @@ class TrainLoopConfig:
     log_every: int = 10
     seed: int = 0
     packed: bool = False  # varlen sequence packing (segment-masked attention)
-    # Mesh: model_axis > 1 builds a (data, model) host mesh and installs
-    # sharding rules for the run. attn_sharding overrides the arch default:
-    # 'heads' | 'sequence' (all-gather context parallel) | 'ring'
-    # (KV-sharded context parallel -- distributed/ring_attention.py).
+    # Mesh: model_axis > 1 (or data_axis > 1) builds a (data, model) host
+    # mesh and installs sharding rules for the run. data_axis = 0 derives
+    # the data axis as devices / model_axis; > 0 pins it (the 2D
+    # data x ring composition -- batch over 'data', ring context
+    # parallelism over 'model' inside each data group). attn_sharding
+    # overrides the arch default: 'heads' | 'sequence' (all-gather
+    # context parallel) | 'ring' (KV-sharded context parallel --
+    # distributed/ring_attention.py).
     model_axis: int = 1
+    data_axis: int = 0
     attn_sharding: Optional[str] = None
     # Observability (repro.obs): metrics always collect into `registry`
     # (or a fresh one); trace_out records step -> data/compute/checkpoint
@@ -90,15 +95,22 @@ def resolve_model(arch: Optional[str], preset: Optional[str], reduce: bool) -> M
 
 def _mesh_context(cfg: ModelConfig, loop: TrainLoopConfig):
     """The sharding context for the run: a (data, model) host mesh +
-    lm_rules when model_axis > 1, else a no-op. Entered around tracing AND
-    execution so `constrain` / the ring-attention route see the rules."""
-    if loop.model_axis <= 1:
+    lm_rules when model_axis > 1 (or data_axis pinned > 1), else a no-op.
+    Entered around tracing AND execution so `constrain` / the
+    ring-attention route see the rules. ``--data-axis N --model-axis M``
+    composes batch/FSDP data parallelism with ring/sequence context
+    parallelism on the same (N, M) mesh."""
+    if loop.model_axis <= 1 and loop.data_axis <= 1:
         return contextlib.nullcontext()
     from repro.distributed.sharding import lm_rules, use_rules
-    from repro.launch.mesh import make_host_mesh
+    from repro.launch.mesh import make_host_mesh, make_long_context_mesh
 
-    mesh = make_host_mesh(model_axis=loop.model_axis)
+    if loop.data_axis > 0:
+        mesh = make_long_context_mesh(loop.data_axis, loop.model_axis)
+    else:
+        mesh = make_host_mesh(model_axis=loop.model_axis)
     rules = lm_rules(cfg, model_axis=loop.model_axis,
+                     data_axis=mesh.shape["data"],
                      batch_size=loop.batch_size)
     stack = contextlib.ExitStack()
     stack.enter_context(mesh)
@@ -161,6 +173,13 @@ def _train(cfg: ModelConfig, loop: TrainLoopConfig, opt_cfg: Optional[AdamWConfi
     c_ckpts = obs.counter("train/checkpoints")
     g_loss = obs.gauge("train/loss")
     tracer = TraceRecorder(process="train") if loop.trace_out else None
+    if tracer is not None:
+        # Ring attention emits per-step spans + hop instants into the
+        # process default recorder at trace time (obs.trace); install this
+        # run's recorder so they land in the same --trace-out file.
+        from repro.obs import set_default_recorder
+
+        set_default_recorder(tracer)
 
     history = {"loss": [], "step_time": [], "stragglers": 0,
                "restored_at": start_step, "registry": obs}
@@ -226,6 +245,9 @@ def _train(cfg: ModelConfig, loop: TrainLoopConfig, opt_cfg: Optional[AdamWConfi
             json.dump(snap, f, indent=1, sort_keys=True)
         print(f"[train] wrote metrics snapshot to {loop.metrics_out}")
     if tracer is not None:
+        from repro.obs import set_default_recorder
+
+        set_default_recorder(None)
         tracer.save(loop.trace_out)
         print(f"[train] wrote Perfetto trace ({len(tracer.events)} events) "
               f"to {loop.trace_out}")
@@ -247,6 +269,12 @@ def main():
                     help="varlen sequence packing (segment-masked attention)")
     ap.add_argument("--model-axis", type=int, default=1,
                     help="model-axis width of the (data, model) host mesh")
+    ap.add_argument("--data-axis", type=int, default=0,
+                    help="data-axis width of the (data, model) mesh; 0 "
+                         "derives it as devices / model-axis. Composes "
+                         "batch/FSDP parallelism with the ring: "
+                         "--data-axis 2 --model-axis 4 runs two 4-wide "
+                         "rings side by side on 8 devices")
     ap.add_argument("--attn-sharding", default=None,
                     choices=("heads", "sequence", "ring"),
                     help="override the arch's attention sharding strategy")
@@ -262,7 +290,7 @@ def main():
         steps=args.steps, seq_len=args.seq, batch_size=args.batch,
         microbatches=args.microbatches, attn_impl=args.attn, ckpt_dir=args.ckpt_dir,
         packed=args.packed, model_axis=args.model_axis,
-        attn_sharding=args.attn_sharding,
+        data_axis=args.data_axis, attn_sharding=args.attn_sharding,
         trace_out=args.trace_out, metrics_out=args.metrics_out,
     )
     _, _, history = train(cfg, loop)

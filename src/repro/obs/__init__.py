@@ -31,4 +31,9 @@ from repro.obs.mfu import (  # noqa: F401
     TrainEfficiency,
     peak_flops,
 )
-from repro.obs.trace import TraceRecorder, validate_trace  # noqa: F401
+from repro.obs.trace import (  # noqa: F401
+    TraceRecorder,
+    get_default_recorder,
+    set_default_recorder,
+    validate_trace,
+)

@@ -33,7 +33,7 @@ import time
 from contextlib import contextmanager
 from typing import Dict, List, Optional
 
-__all__ = ["TraceRecorder"]
+__all__ = ["TraceRecorder", "set_default_recorder", "get_default_recorder"]
 
 
 class TraceRecorder:
@@ -111,6 +111,26 @@ class TraceRecorder:
     def save(self, path: str) -> None:
         with open(path, "w") as f:
             json.dump(self.to_json(), f)
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default recorder. Mirrors metrics.default_registry(): code
+# that runs deep inside tracing with no recorder argument (the ring
+# schedule's per-step spans) emits here when a run has installed one
+# (launch/train.py --trace-out), and stays silent otherwise.
+# ---------------------------------------------------------------------------
+
+_default: Optional["TraceRecorder"] = None
+
+
+def set_default_recorder(rec: Optional["TraceRecorder"]) -> None:
+    """Install (or clear, with ``None``) the process-wide recorder."""
+    global _default
+    _default = rec
+
+
+def get_default_recorder() -> Optional["TraceRecorder"]:
+    return _default
 
 
 def validate_trace(doc: dict) -> List[dict]:
