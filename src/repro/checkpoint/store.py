@@ -1,28 +1,52 @@
-"""Sharded checkpointing: atomic, async, elastic-restorable.
+"""Sharded checkpointing: per-shard, atomic, async, elastic-restorable.
 
-Layout:  <dir>/step_<N>/manifest.json + one .npy per leaf (path-keyed).
-Arrays are stored as *global* logical arrays (device shards gathered), so a
-checkpoint written on mesh (pod,data,model)=(2,16,16) restores onto
-(16,16) -- or onto 1 CPU device -- by re-device_put'ing with the target
-sharding: that is the elastic-rescale path (lose a pod, shrink, resume).
+Layout:  ``<dir>/step_<N>/manifest.json`` + one ``.npy`` per *addressable
+shard* of each leaf.  ``save()`` snapshots each leaf's local shards
+(``arr.addressable_shards``) -- a ring / 2D-mesh run never materializes a
+global array on host; the blocking portion of a save is the
+device-to-host copy of the local shards only.  The manifest records
+``(key, shard_index, index)`` per file so ``restore()`` can reassemble
+the global logical array onto the *current* mesh -- same, smaller, or a
+single CPU device (the elastic path) -- via a caller-provided
+``sharding_fn``.
 
-Durability: writes go to ``step_<N>.tmp`` and are os.rename'd only after
-fsync -- a crash mid-save never corrupts the latest durable step. An async
-mode snapshots (device_get) synchronously and writes on a worker thread so
-training only blocks for the copy, not the IO (the brief's overlap trick).
+Durability contract (DESIGN.md Section 10):
+  * every ``.npy`` is written + fsync'd inside ``step_<N>.tmp``,
+  * the manifest (with a CRC32 per shard file) is written + fsync'd last,
+  * the tmp directory is fsync'd, then os.rename'd to ``step_<N>``,
+  * the parent directory is fsync'd so the rename itself is durable.
+A crash at any point leaves either the previous durable step or a
+``.tmp`` that is never picked up.  ``restore()`` verifies checksums and
+coverage and walks *down* the step ladder past corrupt / partial steps
+instead of crashing (counters ``ckpt/corruptions`` / ``ckpt/fallbacks``).
+
+Async mode snapshots synchronously and writes on a worker thread; the
+worker records its *actual* wall write duration (``drain_write_stats``)
+so the Young/Daly cadence sees the true write cost, not the snapshot
+time.  A failed async write is surfaced immediately (warning +
+``ckpt/async_failures`` counter) and re-raised on the next
+``save()``/``wait()``.
 """
 
 from __future__ import annotations
 
+import io
 import json
 import os
 import shutil
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+import warnings
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruption(RuntimeError):
+    """A step directory failed validation (torn manifest, bad CRC,
+    missing/truncated shard, incomplete coverage)."""
 
 
 def _flatten(tree) -> List[Tuple[str, Any]]:
@@ -42,61 +66,224 @@ def _path_str(p) -> str:
     return str(p)
 
 
+# --------------------------------------------------------------------------
+# shard index arithmetic: manifest indices are [[start, stop], ...] per dim
+# --------------------------------------------------------------------------
+
+
+def _normalize_index(index: Sequence[slice], shape: Sequence[int]) -> List[List[int]]:
+    out = []
+    for sl, n in zip(index, shape):
+        start = 0 if sl.start is None else int(sl.start)
+        stop = int(n) if sl.stop is None else int(sl.stop)
+        out.append([start, stop])
+    return out
+
+
+def _span_shape(bounds: Sequence[Sequence[int]]) -> Tuple[int, ...]:
+    return tuple(int(e) - int(s) for s, e in bounds)
+
+
+def _volume(bounds: Sequence[Sequence[int]]) -> int:
+    v = 1
+    for s, e in bounds:
+        v *= max(0, int(e) - int(s))
+    return v
+
+
+def _fill_region(out: np.ndarray, region: Sequence[Sequence[int]],
+                 shard_bounds: Sequence[Sequence[int]], data: np.ndarray) -> None:
+    """Copy the intersection of ``shard_bounds`` into ``out`` (which covers
+    ``region`` of the global array)."""
+    inter = [(max(rs, ss), min(re, se))
+             for (rs, re), (ss, se) in zip(region, shard_bounds)]
+    if any(e <= s for s, e in inter):
+        return
+    dst = tuple(slice(s - rs, e - rs) for (s, e), (rs, _) in zip(inter, region))
+    src = tuple(slice(s - ss, e - ss) for (s, e), (ss, _) in zip(inter, shard_bounds))
+    out[dst] = data[src]
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 class CheckpointStore:
-    def __init__(self, directory: str, keep_last: int = 3):
+    """See module docstring.  ``registry`` (repro.obs) receives the
+    ``ckpt/*`` counters; ``fault_plan`` (training/fault_injection.FaultPlan)
+    lets tests/debug runs kill or corrupt writes deterministically."""
+
+    MANIFEST_VERSION = 2
+
+    def __init__(self, directory: str, keep_last: int = 3,
+                 registry=None, fault_plan=None):
         self.dir = directory
         self.keep_last = keep_last
         os.makedirs(directory, exist_ok=True)
         self._worker: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        self._write_stats: List[Tuple[int, float]] = []  # (step, seconds)
+        self._lock = threading.Lock()
+        self.fault_plan = fault_plan
+        if registry is None:
+            from repro.obs.metrics import default_registry
+
+            registry = default_registry()
+        self._c_saves = registry.counter("ckpt/saves")
+        self._c_async_fail = registry.counter("ckpt/async_failures")
+        self._c_corrupt = registry.counter("ckpt/corruptions")
+        self._c_fallback = registry.counter("ckpt/fallbacks")
+        self._h_write = registry.histogram(
+            "ckpt/write_seconds", (0.01, 0.1, 1.0, 10.0, 60.0))
 
     # ------------------------------------------------------------- save
     def save(self, step: int, tree, meta: Optional[dict] = None, async_: bool = False):
-        """Snapshot now; write synchronously or on a background thread."""
-        snapshot = [(k, np.asarray(jax.device_get(v))) for k, v in _flatten(tree)]
+        """Snapshot local shards now; write synchronously or on a worker.
+
+        The snapshot copies each leaf's *addressable shards* to host --
+        never the global logical array -- so on a sharded mesh the
+        blocking time is the local-shard device-to-host copy only.
+        """
+        snapshot = self._snapshot(tree)
         treedef = jax.tree_util.tree_structure(tree)
         if async_:
             self.wait()  # one in-flight save at a time
             self._worker = threading.Thread(
-                target=self._write, args=(step, snapshot, str(treedef), meta or {}),
+                target=self._write_guarded,
+                args=(step, snapshot, str(treedef), meta or {}),
                 daemon=True,
             )
             self._worker.start()
         else:
             self._write(step, snapshot, str(treedef), meta or {})
 
-    def _write(self, step: int, snapshot, treedef_str: str, meta: dict):
+    def _snapshot(self, tree):
+        """[(key, global_shape, dtype_str, [(bounds, host_array), ...])].
+
+        Only ``shard.data`` (a single-device local array) is ever copied
+        to host; an assert pins that each host block has the local shard
+        shape, not the global one (the no-full-array guard the per-shard
+        manifest is tested against).
+        """
+        out = []
+        for key, leaf in _flatten(tree):
+            if isinstance(leaf, jax.Array) and hasattr(leaf, "addressable_shards"):
+                shape = tuple(leaf.shape)
+                shards = []
+                for shard in leaf.addressable_shards:
+                    if getattr(shard, "replica_id", 0) != 0:
+                        continue  # replicated copy: one writer per index
+                    bounds = _normalize_index(shard.index, shape)
+                    host = np.asarray(shard.data)
+                    assert host.shape == _span_shape(bounds), (
+                        f"shard snapshot of {key!r} materialized {host.shape}, "
+                        f"expected local {_span_shape(bounds)}"
+                    )
+                    shards.append((bounds, host))
+                out.append((key, list(shape), str(leaf.dtype), shards))
+            else:
+                host = np.asarray(leaf)
+                bounds = [[0, n] for n in host.shape]
+                out.append((key, list(host.shape), str(host.dtype),
+                            [(bounds, host)]))
+        return out
+
+    def _write_guarded(self, step, snapshot, treedef_str, meta):
+        """Async worker body: a failure is surfaced *immediately* (warning
+        + ``ckpt/async_failures``) and re-raised on the next
+        ``save()``/``wait()`` so the supervisor sees it too."""
         try:
-            final = os.path.join(self.dir, f"step_{step:08d}")
-            tmp = final + ".tmp"
-            if os.path.exists(tmp):
-                shutil.rmtree(tmp)
-            os.makedirs(tmp)
-            manifest = {
-                "step": step,
-                "time": time.time(),
-                "meta": meta,
-                "treedef": treedef_str,
-                "leaves": [],
-            }
-            for key, arr in snapshot:
-                fname = key.replace("/", "__") + ".npy"
-                np.save(os.path.join(tmp, fname), arr)
-                manifest["leaves"].append(
-                    {"key": key, "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
-                )
-            mpath = os.path.join(tmp, "manifest.json")
-            with open(mpath, "w") as f:
-                json.dump(manifest, f)
-                f.flush()
-                os.fsync(f.fileno())
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)
-            self._gc()
-        except BaseException as e:  # surfaced on next wait()
+            self._write(step, snapshot, treedef_str, meta)
+        except BaseException as e:
             self._error = e
-            raise
+            self._c_async_fail.inc()
+            warnings.warn(f"async checkpoint write for step {step} failed: {e!r}")
+
+    def _write(self, step: int, snapshot, treedef_str: str, meta: dict):
+        t0 = time.perf_counter()
+        plan = self.fault_plan
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {
+            "version": self.MANIFEST_VERSION,
+            "step": step,
+            "time": time.time(),
+            "meta": meta,
+            "treedef": treedef_str,
+            "leaves": [],
+        }
+        n_files = sum(len(shards) for _, _, _, shards in snapshot)
+        written = 0
+        for key, shape, dtype, shards in snapshot:
+            entry = {"key": key, "shape": shape, "dtype": dtype, "shards": []}
+            base = key.replace("/", "__")
+            for si, (bounds, host) in enumerate(shards):
+                if plan is not None and plan.peek(step, "abort") \
+                        and written >= n_files // 2:
+                    # deterministic mid-write kill: half the files exist,
+                    # the manifest never does -- the .tmp is abandoned.
+                    from repro.training.fault_injection import InjectedFault
+
+                    plan.take(step, "abort")
+                    raise InjectedFault(f"abort@{step}: checkpoint write killed mid-file")
+                fname = f"{base}.s{si:02d}.npy"
+                fpath = os.path.join(tmp, fname)
+                with open(fpath, "wb") as f:
+                    np.save(f, host)
+                    f.flush()
+                    os.fsync(f.fileno())
+                with open(fpath, "rb") as f:
+                    crc = 0
+                    while True:
+                        block = f.read(1 << 20)
+                        if not block:
+                            break
+                        crc = zlib.crc32(block, crc)
+                entry["shards"].append({
+                    "file": fname, "index": bounds,
+                    "crc32": crc, "nbytes": os.path.getsize(fpath),
+                })
+                written += 1
+            manifest["leaves"].append(entry)
+        mpath = os.path.join(tmp, "manifest.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_dir(tmp)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _fsync_dir(self.dir)
+        if plan is not None:
+            kind = plan.post_write_fault(step)
+            if kind is not None:
+                from repro.training import fault_injection as FI
+
+                FI.mutilate(final, kind, plan.rng(step))
+        self._gc()
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self._write_stats.append((step, dt))
+        self._c_saves.inc()
+        self._h_write.observe(dt)
+        self._trace_write(step, dt)
+
+    def _trace_write(self, step: int, seconds: float) -> None:
+        from repro.obs.trace import get_default_recorder
+
+        rec = get_default_recorder()
+        if rec is not None:
+            rec.name_thread(90, "ckpt writer")
+            rec.complete("ckpt_write", 90, rec.now_us() - seconds * 1e6,
+                         seconds * 1e6, args={"step": step})
 
     def wait(self):
         if self._worker is not None:
@@ -105,6 +292,14 @@ class CheckpointStore:
         if self._error is not None:
             err, self._error = self._error, None
             raise RuntimeError(f"async checkpoint save failed: {err!r}") from err
+
+    def drain_write_stats(self) -> List[Tuple[int, float]]:
+        """(step, wall-seconds) of writes completed since the last drain --
+        the worker's *actual* write duration, the number Young/Daly needs
+        (the blocking ``save()`` call only measures the snapshot)."""
+        with self._lock:
+            out, self._write_stats = self._write_stats, []
+        return out
 
     def _gc(self):
         steps = self.steps()
@@ -124,33 +319,156 @@ class CheckpointStore:
         steps = self.steps()
         return steps[-1] if steps else None
 
+    def _load_step(self, step: int, keys: List[str]) -> Tuple[dict, Dict[str, dict]]:
+        """Parse + fully validate one step dir; raises CheckpointCorruption.
+
+        Returns (manifest, {key: {"shape", "dtype", "shards":
+        [(bounds, np_array), ...]}}) with every checksum verified and
+        every leaf's shards covering the global volume exactly.
+        """
+        root = os.path.join(self.dir, f"step_{step:08d}")
+        try:
+            with open(os.path.join(root, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, ValueError) as e:
+            raise CheckpointCorruption(f"step {step}: torn manifest ({e})") from e
+        if not isinstance(manifest, dict) or "leaves" not in manifest:
+            raise CheckpointCorruption(f"step {step}: manifest missing leaves")
+        by_key: Dict[str, dict] = {}
+        for entry in manifest["leaves"]:
+            if "shards" not in entry:  # v1 manifest: one whole-array file
+                entry = dict(entry)
+                entry["shards"] = [{
+                    "file": entry["file"],
+                    "index": [[0, n] for n in entry["shape"]],
+                    "crc32": None,
+                }]
+            by_key[entry["key"]] = entry
+        missing = [k for k in keys if k not in by_key]
+        if missing:
+            raise CheckpointCorruption(
+                f"step {step}: missing leaves {missing[:5]}...")
+        loaded: Dict[str, dict] = {}
+        for key in keys:
+            entry = by_key[key]
+            shape = tuple(entry["shape"])
+            shards = []
+            covered = 0
+            for sh in entry["shards"]:
+                fpath = os.path.join(self.dir, f"step_{step:08d}", sh["file"])
+                try:
+                    with open(fpath, "rb") as f:
+                        raw = f.read()
+                except OSError as e:
+                    raise CheckpointCorruption(
+                        f"step {step}: missing shard {sh['file']} ({e})") from e
+                if sh.get("crc32") is not None and zlib.crc32(raw) != sh["crc32"]:
+                    raise CheckpointCorruption(
+                        f"step {step}: CRC mismatch in {sh['file']}")
+                try:
+                    arr = np.load(io.BytesIO(raw), allow_pickle=False)
+                except Exception as e:
+                    raise CheckpointCorruption(
+                        f"step {step}: unreadable shard {sh['file']} ({e})") from e
+                bounds = [[int(s), int(e)] for s, e in sh["index"]]
+                if arr.shape != _span_shape(bounds) or str(arr.dtype) != entry["dtype"]:
+                    raise CheckpointCorruption(
+                        f"step {step}: shard {sh['file']} shape/dtype mismatch")
+                if any(s < 0 or e > n for (s, e), n in zip(bounds, shape)):
+                    raise CheckpointCorruption(
+                        f"step {step}: shard {sh['file']} index out of bounds")
+                covered += _volume(bounds)
+                shards.append((bounds, arr))
+            want = int(np.prod(shape)) if shape else 1
+            if covered != want:
+                raise CheckpointCorruption(
+                    f"step {step}: leaf {key!r} shards cover {covered} of "
+                    f"{want} elements")
+            loaded[key] = {"shape": shape, "dtype": entry["dtype"], "shards": shards}
+        return manifest, loaded
+
+    def _place(self, info: dict, sharding) -> jax.Array:
+        """Reassemble one leaf onto the current mesh.
+
+        With a target sharding, only the regions the callback asks for are
+        assembled (jax.make_array_from_callback); the full logical array
+        is built on host only for the unsharded device_put path.
+        """
+        shape, dtype, shards = info["shape"], np.dtype(info["dtype"]), info["shards"]
+
+        def region(idx):
+            idx = idx if isinstance(idx, tuple) else (idx,)
+            bounds = [[0 if sl.start is None else int(sl.start),
+                       int(n) if sl.stop is None else int(sl.stop)]
+                      for sl, n in zip(idx, shape)]
+            out = np.empty(_span_shape(bounds), dtype)
+            for sb, data in shards:
+                _fill_region(out, bounds, sb, data)
+            return out
+
+        if sharding is None:
+            return jax.device_put(region(tuple(slice(None) for _ in shape)))
+        return jax.make_array_from_callback(tuple(shape), sharding, region)
+
     def restore(
         self,
         template,
         step: Optional[int] = None,
         sharding_fn: Optional[Callable[[str, Any], Any]] = None,
     ) -> Tuple[Any, dict]:
-        """Restore into the structure of ``template``. ``sharding_fn(key,
-        array)`` may return a jax.sharding.Sharding to place each leaf on the
-        *current* mesh (elastic restore)."""
-        step = step if step is not None else self.latest_step()
-        if step is None:
+        """Restore into the structure of ``template``.
+
+        ``sharding_fn(key, spec)`` (``spec`` a ShapeDtypeStruct of the
+        saved leaf) may return a ``jax.sharding.Sharding`` to place each
+        leaf on the *current* mesh -- the elastic path: a checkpoint saved
+        per-shard on (2, 4) restores onto (1, 4), or onto one CPU device.
+
+        Walks *down* the step ladder: a corrupt or partial step (torn
+        manifest, bad CRC, missing shard) is skipped with a warning and
+        the ``ckpt/corruptions`` / ``ckpt/fallbacks`` counters bumped;
+        only when no durable step validates does this raise.
+        """
+        candidates = self.steps()
+        if step is not None:
+            candidates = [s for s in candidates if s <= step]
+        if not candidates:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        root = os.path.join(self.dir, f"step_{step:08d}")
-        with open(os.path.join(root, "manifest.json")) as f:
-            manifest = json.load(f)
-        by_key: Dict[str, dict] = {l["key"]: l for l in manifest["leaves"]}
         keys = [k for k, _ in _flatten(template)]
-        missing = [k for k in keys if k not in by_key]
-        if missing:
-            raise KeyError(f"checkpoint {step} missing leaves: {missing[:5]}...")
-        leaves = []
-        for key, tmpl_leaf in _flatten(template):
-            arr = np.load(os.path.join(root, by_key[key]["file"]))
-            if sharding_fn is not None:
-                sh = sharding_fn(key, arr)
-                leaves.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
-            else:
-                leaves.append(jax.device_put(arr))
-        treedef = jax.tree_util.tree_structure(template)
-        return jax.tree_util.tree_unflatten(treedef, leaves), manifest["meta"]
+        first = True
+        for s in reversed(candidates):
+            try:
+                manifest, loaded = self._load_step(s, keys)
+            except CheckpointCorruption as e:
+                self._c_corrupt.inc()
+                self._c_fallback.inc()
+                warnings.warn(f"skipping corrupt checkpoint: {e}")
+                first = False
+                continue
+            if not first:
+                warnings.warn(
+                    f"restored step {s} after falling back past corrupt steps")
+            t0 = time.perf_counter()
+            leaves = []
+            for key in keys:
+                info = loaded[key]
+                sharding = None
+                if sharding_fn is not None:
+                    spec = jax.ShapeDtypeStruct(
+                        tuple(info["shape"]), np.dtype(info["dtype"]))
+                    sharding = sharding_fn(key, spec)
+                leaves.append(self._place(info, sharding))
+            treedef = jax.tree_util.tree_structure(template)
+            self._trace_restore(s, time.perf_counter() - t0)
+            return jax.tree_util.tree_unflatten(treedef, leaves), manifest["meta"]
+        raise FileNotFoundError(
+            f"no *valid* checkpoint in {self.dir}: all of steps "
+            f"{candidates} failed validation")
+
+    def _trace_restore(self, step: int, seconds: float) -> None:
+        from repro.obs.trace import get_default_recorder
+
+        rec = get_default_recorder()
+        if rec is not None:
+            rec.name_thread(90, "ckpt writer")
+            rec.complete("ckpt_restore", 90, rec.now_us() - seconds * 1e6,
+                         seconds * 1e6, args={"step": step})

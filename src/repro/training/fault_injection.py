@@ -1,0 +1,181 @@
+"""Deterministic fault injection for the train loop and checkpoint store.
+
+A :class:`FaultPlan` is a seeded, step-keyed list of fault events.  The
+same plan string always produces the same faults at the same steps, so a
+kill-and-resume test (or a ``--fault-plan`` debug run) is exactly
+reproducible.  Each event fires **once** per process -- a supervisor
+restart that replays the faulting step does not re-fire it, so recovery
+can actually be observed.
+
+Fault taxonomy (DESIGN.md Section 10):
+
+  step faults (fired by the train loop via :meth:`FaultPlan.fire_step`):
+    * ``raise``    -- raise :class:`InjectedFault` inside the step fn
+                      (a node failure; the supervisor restores + replays)
+    * ``sigterm``  -- deliver SIGTERM to this process (the preemption
+                      notice; exercises the grace drain-and-save path)
+    * ``sigkill``  -- deliver SIGKILL (the hard preemption; only an
+                      external relaunch recovers)
+
+  write faults (consulted by CheckpointStore during ``_write``):
+    * ``abort``    -- kill the checkpoint write mid-file: half the shard
+                      files exist, the manifest never does, the ``.tmp``
+                      is abandoned (exercises async-failure surfacing)
+
+  disk faults (applied to the *durable* ``step_<N>`` dir after rename --
+  the states a lying disk / power cut / bitrot leave behind):
+    * ``torn``     -- truncate ``manifest.json`` mid-file
+    * ``trunc``    -- truncate one shard ``.npy`` file
+    * ``drop``     -- delete one shard file (missing leaf)
+    * ``corrupt``  -- flip bytes inside one shard (CRC mismatch)
+
+Plan grammar (the ``train.py --fault-plan`` flag)::
+
+    "<kind>@<step>[,<kind>@<step>...]"     e.g.  "raise@5,corrupt@8"
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+STEP_KINDS = ("raise", "sigterm", "sigkill")
+WRITE_KINDS = ("abort",)
+DISK_KINDS = ("torn", "trunc", "drop", "corrupt")
+ALL_KINDS = STEP_KINDS + WRITE_KINDS + DISK_KINDS
+
+
+class InjectedFault(RuntimeError):
+    """A fault raised by the harness (never by real code paths)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    step: int
+    kind: str
+
+
+class FaultPlan:
+    """A deterministic (seeded, step-keyed) set of fault events."""
+
+    def __init__(self, events: List[FaultEvent], seed: int = 0):
+        for ev in events:
+            if ev.kind not in ALL_KINDS:
+                raise ValueError(f"unknown fault kind {ev.kind!r}; want {ALL_KINDS}")
+        self.events = sorted(events, key=lambda e: (e.step, e.kind))
+        self.seed = seed
+        self._fired: set = set()
+
+    # ------------------------------------------------------ construction
+    @classmethod
+    def parse(cls, spec: str, seed: int = 0) -> "FaultPlan":
+        """``"raise@5,corrupt@8"`` -> FaultPlan; empty string -> no faults."""
+        events = []
+        for part in filter(None, (p.strip() for p in spec.split(","))):
+            try:
+                kind, at = part.split("@")
+                events.append(FaultEvent(int(at), kind.strip()))
+            except ValueError as e:
+                raise ValueError(
+                    f"bad fault spec {part!r}; want kind@step") from e
+        return cls(events, seed=seed)
+
+    @classmethod
+    def random(cls, seed: int, total_steps: int, rate: float = 0.05,
+               kinds: Tuple[str, ...] = ("raise", "corrupt", "trunc")) -> "FaultPlan":
+        """A seeded random plan: each step draws a fault with prob ``rate``.
+
+        Purely a function of (seed, total_steps, rate, kinds) -- two
+        processes with the same arguments build the same plan.
+        """
+        rng = np.random.default_rng(seed)
+        events = []
+        for step in range(1, total_steps):
+            if rng.random() < rate:
+                events.append(FaultEvent(step, kinds[int(rng.integers(len(kinds)))]))
+        return cls(events, seed=seed)
+
+    def __repr__(self):
+        return ("FaultPlan(" +
+                ",".join(f"{e.kind}@{e.step}" for e in self.events) +
+                f"; seed={self.seed})")
+
+    # ----------------------------------------------------------- firing
+    def rng(self, step: int) -> np.random.Generator:
+        """The per-step RNG (picks *which* file a disk fault mutilates)."""
+        return np.random.default_rng((self.seed, step))
+
+    def peek(self, step: int, *kinds: str) -> Optional[str]:
+        """First un-fired event at ``step`` among ``kinds`` (or any)."""
+        for ev in self.events:
+            if ev.step == step and (not kinds or ev.kind in kinds) \
+                    and ev not in self._fired:
+                return ev.kind
+        return None
+
+    def take(self, step: int, kind: str) -> None:
+        self._fired.add(FaultEvent(step, kind))
+
+    def fire_step(self, step: int) -> None:
+        """Called by the train loop at the top of each step."""
+        kind = self.peek(step, *STEP_KINDS)
+        if kind is None:
+            return
+        self.take(step, kind)
+        if kind == "raise":
+            raise InjectedFault(f"raise@{step}: injected step failure")
+        if kind == "sigterm":
+            os.kill(os.getpid(), signal.SIGTERM)
+        elif kind == "sigkill":
+            os.kill(os.getpid(), signal.SIGKILL)
+
+    def write_fault(self, step: int) -> Optional[str]:
+        return self.peek(step, *WRITE_KINDS)
+
+    def post_write_fault(self, step: int) -> Optional[str]:
+        kind = self.peek(step, *DISK_KINDS)
+        if kind is not None:
+            self.take(step, kind)
+        return kind
+
+
+# ---------------------------------------------------------------------------
+# Disk-state mutilation: applied to a durable step_<N> directory.  Used by
+# the store's post-write hook and directly by tests (corrupt an already
+# durable checkpoint).
+# ---------------------------------------------------------------------------
+
+
+def mutilate(step_dir: str, kind: str, rng: np.random.Generator) -> str:
+    """Apply one disk fault ``kind`` to ``step_dir``; returns the victim
+    file name (deterministic in ``rng``)."""
+    if kind not in DISK_KINDS:
+        raise ValueError(f"unknown disk fault {kind!r}; want {DISK_KINDS}")
+    if kind == "torn":
+        victim = os.path.join(step_dir, "manifest.json")
+        size = os.path.getsize(victim)
+        with open(victim, "r+b") as f:
+            f.truncate(max(1, size // 2))
+        return "manifest.json"
+    shards = sorted(n for n in os.listdir(step_dir) if n.endswith(".npy"))
+    if not shards:
+        raise ValueError(f"{step_dir} has no shard files to mutilate")
+    victim = shards[int(rng.integers(len(shards)))]
+    path = os.path.join(step_dir, victim)
+    size = os.path.getsize(path)
+    if kind == "trunc":
+        with open(path, "r+b") as f:
+            f.truncate(max(1, size // 2))
+    elif kind == "drop":
+        os.remove(path)
+    elif kind == "corrupt":
+        with open(path, "r+b") as f:
+            f.seek(size // 2)
+            block = bytearray(f.read(8))
+            f.seek(size // 2)
+            f.write(bytes(b ^ 0xFF for b in block) or b"\xff")
+    return victim

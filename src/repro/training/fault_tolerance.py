@@ -63,28 +63,50 @@ class StepMonitor:
 
 
 class CheckpointCadence:
-    """Young/Daly: checkpoint every sqrt(2 * MTBF * write_cost) seconds."""
+    """Young/Daly: checkpoint every sqrt(2 * MTBF * write_cost) seconds.
+
+    ``min_interval_steps`` is a *floor* on spacing (never checkpoint
+    sooner than this many steps after the last one -- ``--ckpt-every`` in
+    launch/train.py); above the floor the Young/Daly interval governs.
+    The historical semantics (``step % min_steps == 0``) made the flag a
+    maximum interval acting under a minimum's name and ignored
+    ``step_time``; now ``step_time`` participates: we checkpoint at the
+    step *boundary closest to* the optimal interval -- if the next
+    opportunity (one step away) would overshoot the optimum by more than
+    we currently undershoot it, checkpoint now instead of mid-burst.
+
+    ``write_cost`` must be fed the worker's *actual* wall write duration
+    (CheckpointStore.drain_write_stats), not the blocking snapshot time.
+    """
 
     def __init__(self, mtbf_seconds: float, min_interval_steps: int = 10):
         self.mtbf = mtbf_seconds
-        self.min_steps = min_interval_steps
-        self.write_cost = 1.0  # updated from observed saves
+        self.min_steps = max(1, min_interval_steps)
+        self.write_cost: Optional[float] = None  # unknown until observed
         self._last_ckpt_time = time.monotonic()
+        self._last_ckpt_step = 0
 
     def observe_write(self, seconds: float):
-        self.write_cost = 0.5 * self.write_cost + 0.5 * max(seconds, 1e-3)
+        s = max(seconds, 1e-3)
+        self.write_cost = s if self.write_cost is None \
+            else 0.5 * self.write_cost + 0.5 * s
 
     @property
     def interval_seconds(self) -> float:
-        return math.sqrt(2.0 * self.mtbf * self.write_cost)
+        return math.sqrt(2.0 * self.mtbf * (self.write_cost or 1.0))
 
-    def should_checkpoint(self, step: int, step_time: float) -> bool:
-        if step % self.min_steps == 0:
-            return True
-        return (time.monotonic() - self._last_ckpt_time) >= self.interval_seconds
+    def should_checkpoint(self, step: int, step_time: float = 0.0) -> bool:
+        if step - self._last_ckpt_step < self.min_steps:
+            return False  # the floor: ckpt_every is a minimum spacing
+        elapsed = time.monotonic() - self._last_ckpt_time
+        # Nearest-boundary rule: now is `interval - elapsed` early; the
+        # next chance is `elapsed + step_time - interval` late.
+        return elapsed + 0.5 * max(step_time, 0.0) >= self.interval_seconds
 
-    def mark(self):
+    def mark(self, step: Optional[int] = None):
         self._last_ckpt_time = time.monotonic()
+        if step is not None:
+            self._last_ckpt_step = step
 
 
 def run_with_restarts(
@@ -93,30 +115,65 @@ def run_with_restarts(
     save_fn: Callable[[int, object], None],
     *,
     total_steps: int,
-    checkpoint_every: int,
+    checkpoint_every: Optional[int] = None,
+    cadence: Optional[CheckpointCadence] = None,
     max_restarts: int = 3,
+    should_stop: Optional[Callable[[], bool]] = None,
+    registry=None,
 ):
     """Supervisor: drive step_fn with checkpoint/restart on failure.
 
-    restore_fn() -> (start_step, state); step_fn(step, state) -> state;
-    save_fn(step, state). Returns (final_state, n_restarts, telemetry).
+    ``restore_fn() -> (start_step, state)`` -- called at start AND after
+    every failure; it owns the whole incarnation setup (re-form the mesh,
+    re-jit the step, reload the durable checkpoint, reseat the data
+    stream).  ``step_fn(step, state) -> state``; ``save_fn(step, state)``.
+
+    Checkpoint policy: ``cadence`` (Young/Daly, step-time aware) if
+    given, else fixed ``checkpoint_every`` steps; the final step always
+    saves.  ``should_stop()`` checked between steps is the preemption
+    notice -- on True the loop saves and returns early (telemetry
+    ``preempted=True``); the caller drains the async writer.
+
+    Returns (final_state, n_restarts, telemetry).  Restarts are counted
+    into ``registry`` (repro.obs) as ``train/restarts`` when provided.
     """
+    if (checkpoint_every is None) == (cadence is None):
+        raise ValueError("pass exactly one of checkpoint_every / cadence")
     restarts = 0
+    c_restarts = registry.counter("train/restarts") if registry else None
     monitor = StepMonitor()
     start_step, state = restore_fn()
     step = start_step
+    preempted = False
     while step < total_steps:
+        if should_stop is not None and should_stop():
+            preempted = True
+            save_fn(step, state)
+            break
         try:
             monitor.start()
             state = step_fn(step, state)
             monitor.stop()
             step += 1
-            if step % checkpoint_every == 0 or step == total_steps:
+            if cadence is not None:
+                want = cadence.should_checkpoint(step, monitor.times[-1])
+            else:
+                want = step % checkpoint_every == 0
+            if want or step == total_steps:
                 save_fn(step, state)
+                if cadence is not None:
+                    cadence.mark(step)
         except Exception:
             restarts += 1
+            if c_restarts is not None:
+                c_restarts.inc()
             if restarts > max_restarts:
                 raise
             start_step, state = restore_fn()
             step = start_step
-    return state, restarts, {"stragglers": monitor.events, "median_step": monitor.median}
+    return state, restarts, {
+        "stragglers": monitor.events,
+        "median_step": monitor.median,
+        "preempted": preempted,
+        "last_step": step,
+    }

@@ -1,15 +1,22 @@
-"""Checkpoint/restart + fault tolerance: atomicity, async saves, GC,
-elastic restore, data-pipeline determinism, supervisor restart loop."""
+"""Checkpoint/restart + fault tolerance: atomicity, per-shard manifests,
+checksums + the corruption fallback ladder, async saves and write-cost
+accounting, GC, elastic restore, data-pipeline determinism, Young/Daly
+cadence semantics, supervisor restart loop, deterministic fault plans."""
 
+import json
 import os
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.store import CheckpointStore
+from repro.checkpoint.store import CheckpointCorruption, CheckpointStore
 from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.obs import MetricsRegistry
+from repro.training import fault_injection as FI
+from repro.training.fault_injection import FaultPlan, InjectedFault
 from repro.training.fault_tolerance import (
     CheckpointCadence,
     StepMonitor,
@@ -140,9 +147,268 @@ def test_step_monitor_flags_straggler():
     assert ev is not None and ev.duration > ev.median
 
 
-def test_cadence_young_daly():
+def test_cadence_young_daly_interval():
     cad = CheckpointCadence(mtbf_seconds=3600, min_interval_steps=100)
     cad.observe_write(2.0)
-    # sqrt(2 * 3600 * ~1.5) ~ 104s; exact value tracks the EWMA
+    # first observation seeds the cost directly: sqrt(2 * 3600 * 2) ~ 120s
     assert 60 < cad.interval_seconds < 180
-    assert cad.should_checkpoint(200, 0.1)  # step multiple triggers
+    cad.observe_write(1.0)  # EWMA from there
+    assert cad.write_cost == pytest.approx(1.5)
+
+
+def test_cadence_floor_is_a_minimum():
+    """ckpt_every is a FLOOR on spacing: below it never checkpoint, above
+    it the Young/Daly interval governs (the old code checkpointed *every*
+    min_interval_steps -- a maximum acting under a minimum's name)."""
+    cad = CheckpointCadence(mtbf_seconds=3600, min_interval_steps=10)
+    cad.observe_write(1.0)
+    assert not cad.should_checkpoint(5, 0.1)  # under the floor
+    assert not cad.should_checkpoint(10, 0.1)  # floor met, interval not
+    assert not cad.should_checkpoint(200, 0.1)  # still: ~85s not elapsed
+    # tiny MTBF: interval collapses below one step => save at the floor
+    fast = CheckpointCadence(mtbf_seconds=1e-4, min_interval_steps=10)
+    fast.observe_write(0.01)
+    assert not fast.should_checkpoint(9, 0.5)
+    assert fast.should_checkpoint(10, 0.5)
+    fast.mark(10)
+    assert not fast.should_checkpoint(15, 0.5)  # floor counts from mark
+    assert fast.should_checkpoint(20, 0.5)
+
+
+def test_cadence_step_time_participates():
+    """Nearest-boundary rule: with the optimum mid-way to the next step
+    boundary, a long step tips the decision to 'checkpoint now'."""
+    cad = CheckpointCadence(mtbf_seconds=3600, min_interval_steps=1)
+    cad.write_cost = 1e-8  # force a tiny Young/Daly interval directly
+    cad._last_ckpt_time = __import__("time").monotonic() - 0.001
+    # elapsed ~0.001 < interval? interval = sqrt(2*3600*1e-8) ~ 0.0085
+    assert not cad.should_checkpoint(5, step_time=0.0)
+    assert cad.should_checkpoint(5, step_time=0.1)  # 0.001 + 0.05 > 0.0085
+
+
+# ---------------------------------------------------------------------------
+# Per-shard manifest schema, checksums, durability accounting
+# ---------------------------------------------------------------------------
+
+
+def _manifest(path, step):
+    with open(os.path.join(path, f"step_{step:08d}", "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_v2_per_shard_schema(tmp_path):
+    store = CheckpointStore(str(tmp_path), registry=MetricsRegistry())
+    tree = _tree()
+    store.save(5, tree, meta={"step": 5})
+    man = _manifest(str(tmp_path), 5)
+    assert man["version"] == 2
+    by_key = {l["key"]: l for l in man["leaves"]}
+    w = by_key["w"]
+    assert w["shape"] == [4, 8] and w["dtype"] == "float32"
+    # single device: one shard covering the whole logical array, with CRC
+    assert len(w["shards"]) == 1
+    sh = w["shards"][0]
+    assert sh["index"] == [[0, 4], [0, 8]]
+    assert isinstance(sh["crc32"], int)
+    assert os.path.exists(os.path.join(str(tmp_path), "step_00000005", sh["file"]))
+
+
+def test_async_write_cost_recorded(tmp_path):
+    """The worker's actual wall write duration reaches drain_write_stats
+    -- the Young/Daly feed (the blocking save() only sees the snapshot)."""
+    store = CheckpointStore(str(tmp_path), registry=MetricsRegistry())
+    store.save(1, _tree(), meta={"step": 1}, async_=True)
+    store.wait()
+    stats = store.drain_write_stats()
+    assert len(stats) == 1
+    step, seconds = stats[0]
+    assert step == 1 and seconds > 0
+    assert store.drain_write_stats() == []  # drained
+
+
+def test_restore_passes_shape_spec_to_sharding_fn(tmp_path):
+    store = CheckpointStore(str(tmp_path), registry=MetricsRegistry())
+    tree = _tree()
+    store.save(1, tree, meta={"step": 1})
+    seen = {}
+
+    def fn(key, spec):
+        seen[key] = (tuple(spec.shape), str(spec.dtype))
+        return None
+
+    store.restore(tree, sharding_fn=fn)
+    assert seen["w"] == ((4, 8), "float32")
+
+
+def test_v1_manifest_still_restores(tmp_path):
+    """A pre-PR-10 whole-array manifest (no shards/CRC) restores."""
+    store = CheckpointStore(str(tmp_path), registry=MetricsRegistry())
+    tree = _tree()
+    root = os.path.join(str(tmp_path), "step_00000003")
+    os.makedirs(root)
+    leaves = []
+    for key, leaf in [("w", tree["w"]), ("nested/b", tree["nested"]["b"])]:
+        fname = key.replace("/", "__") + ".npy"
+        arr = np.asarray(leaf)
+        np.save(os.path.join(root, fname), arr)
+        leaves.append({"key": key, "file": fname, "shape": list(arr.shape),
+                       "dtype": str(arr.dtype)})
+    with open(os.path.join(root, "manifest.json"), "w") as f:
+        json.dump({"step": 3, "meta": {"step": 3}, "leaves": leaves}, f)
+    restored, meta = store.restore(jax.tree.map(jnp.zeros_like, tree))
+    assert meta["step"] == 3
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection matrix: every corrupt/partial state is detected on
+# restore and falls back to the previous durable step -- never a crash,
+# never silently-wrong weights.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["torn", "trunc", "drop", "corrupt"])
+def test_disk_fault_falls_back_one_step(tmp_path, kind):
+    reg = MetricsRegistry()
+    store = CheckpointStore(str(tmp_path), registry=reg)
+    t1, t2 = _tree(1), _tree(2)
+    store.save(1, t1, meta={"step": 1})
+    store.save(2, t2, meta={"step": 2})
+    FI.mutilate(os.path.join(str(tmp_path), "step_00000002"), kind,
+                np.random.default_rng(0))
+    with pytest.warns(UserWarning, match="corrupt"):
+        restored, meta = store.restore(jax.tree.map(jnp.zeros_like, t1))
+    assert meta["step"] == 1  # fell back to the previous durable step
+    for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    snap = reg.snapshot()
+    assert snap["ckpt/corruptions"] == 1 and snap["ckpt/fallbacks"] == 1
+
+
+def test_all_corrupt_raises_not_silently_wrong(tmp_path):
+    store = CheckpointStore(str(tmp_path), registry=MetricsRegistry())
+    t1 = _tree(1)
+    store.save(1, t1, meta={"step": 1})
+    FI.mutilate(os.path.join(str(tmp_path), "step_00000001"), "corrupt",
+                np.random.default_rng(0))
+    with pytest.warns(UserWarning):
+        with pytest.raises(FileNotFoundError, match="valid"):
+            store.restore(jax.tree.map(jnp.zeros_like, t1))
+
+
+def test_fault_plan_post_write_corruption(tmp_path):
+    """A plan-driven disk fault corrupts the durable step the store just
+    wrote; restore detects it and falls back."""
+    plan = FaultPlan.parse("corrupt@2")
+    store = CheckpointStore(str(tmp_path), registry=MetricsRegistry(),
+                            fault_plan=plan)
+    t1, t2 = _tree(1), _tree(2)
+    store.save(1, t1, meta={"step": 1})
+    store.save(2, t2, meta={"step": 2})
+    with pytest.warns(UserWarning, match="corrupt"):
+        _, meta = store.restore(jax.tree.map(jnp.zeros_like, t1))
+    assert meta["step"] == 1
+
+
+def test_abort_write_surfaces_immediately_and_on_wait(tmp_path):
+    """A mid-file write kill leaves only a .tmp (the previous step stays
+    durable), warns immediately, bumps ckpt/async_failures, and re-raises
+    on wait()."""
+    reg = MetricsRegistry()
+    plan = FaultPlan.parse("abort@2")
+    store = CheckpointStore(str(tmp_path), registry=reg, fault_plan=plan)
+    t = _tree()
+    store.save(1, t, meta={"step": 1})
+    with pytest.warns(UserWarning, match="failed"):
+        store.save(2, t, meta={"step": 2}, async_=True)
+        store._worker.join()  # let the worker hit the fault
+    assert reg.snapshot()["ckpt/async_failures"] == 1
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        store.wait()
+    assert store.latest_step() == 1  # tmp never became visible
+    assert os.path.exists(os.path.join(str(tmp_path), "step_00000002.tmp"))
+    # the next save reuses the step and the run carries on
+    store.save(2, t, meta={"step": 2})
+    assert store.latest_step() == 2
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan semantics
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_parse_and_fire_once():
+    plan = FaultPlan.parse("raise@3,corrupt@5")
+    assert [(e.kind, e.step) for e in plan.events] == [("raise", 3), ("corrupt", 5)]
+    with pytest.raises(InjectedFault):
+        plan.fire_step(3)
+    plan.fire_step(3)  # fired once: a replayed step does not re-fire
+    assert plan.post_write_fault(5) == "corrupt"
+    assert plan.post_write_fault(5) is None
+
+
+def test_fault_plan_random_deterministic():
+    a = FaultPlan.random(7, 100, rate=0.2)
+    b = FaultPlan.random(7, 100, rate=0.2)
+    assert a.events == b.events and len(a.events) > 0
+    assert FaultPlan.random(8, 100, rate=0.2).events != a.events
+
+
+def test_fault_plan_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.parse("explode@3")
+    with pytest.raises(ValueError, match="bad fault spec"):
+        FaultPlan.parse("raise-at-3")
+
+
+# ---------------------------------------------------------------------------
+# Supervisor: cadence-driven saves, preemption stop, restart counters
+# ---------------------------------------------------------------------------
+
+
+def test_run_with_restarts_cadence_and_registry():
+    reg = MetricsRegistry()
+    saves, fail_at = {}, {3}
+    cad = CheckpointCadence(mtbf_seconds=1e-4, min_interval_steps=2)
+    cad.observe_write(0.01)
+
+    def restore_fn():
+        return (max(saves), saves[max(saves)]) if saves else (0, 0.0)
+
+    def step_fn(step, state):
+        if step in fail_at:
+            fail_at.clear()
+            raise InjectedFault("boom")
+        return state + 1.0
+
+    state, restarts, telem = run_with_restarts(
+        step_fn, restore_fn, lambda s, st: saves.__setitem__(s, st),
+        total_steps=8, cadence=cad, registry=reg,
+    )
+    assert state == 8.0 and restarts == 1
+    assert reg.snapshot()["train/restarts"] == 1
+    assert 8 in saves  # the final step always saves
+    assert telem["preempted"] is False
+
+
+def test_run_with_restarts_should_stop_saves_and_exits():
+    saves = {}
+    calls = {"n": 0}
+
+    def should_stop():
+        calls["n"] += 1
+        return calls["n"] > 3  # preemption notice arrives mid-run
+
+    state, restarts, telem = run_with_restarts(
+        lambda step, s: s + 1.0, lambda: (0, 0.0),
+        lambda s, st: saves.__setitem__(s, st),
+        total_steps=100, checkpoint_every=10, should_stop=should_stop,
+    )
+    assert telem["preempted"] is True
+    assert telem["last_step"] == 3 and saves == {3: 3.0}
+
+
+def test_run_with_restarts_needs_exactly_one_policy():
+    with pytest.raises(ValueError, match="exactly one"):
+        run_with_restarts(lambda s, st: st, lambda: (0, 0), lambda s, st: None,
+                          total_steps=1)

@@ -1,0 +1,255 @@
+"""Elastic checkpoint restore across mesh shapes + kill-and-resume.
+
+Two groups:
+
+  * in-process tests on an 8-virtual-device (data=2, model=4) mesh --
+    save writes per-shard files (never a host gather of the global
+    array) and the same checkpoint restores onto a smaller (1, 4)
+    submesh and onto a single device, bitwise equal;
+  * slow-tier subprocess tests: SIGKILL the trainer mid-run via a
+    deterministic fault plan, relaunch against the same --ckpt-dir, and
+    assert the resumed loss curve is bitwise identical to an
+    uninterrupted run's suffix -- on one device and on the composed
+    (data=2 x model=4) ring mesh.
+
+The in-process group needs ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+*before* jax starts (the CI multidevice job sets it); the subprocess
+group sets the flag itself and runs anywhere.
+"""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import CheckpointStore
+
+P = jax.sharding.PartitionSpec
+NS = jax.sharding.NamedSharding
+
+multidevice8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+
+def _mesh24():
+    return jax.make_mesh((2, 4), ("data", "model"))
+
+
+def _host_tree():
+    return {
+        "w": np.arange(8 * 16, dtype=np.float32).reshape(8, 16),
+        "nested": {"b": np.arange(16, dtype=np.float32) * 0.5},
+    }
+
+
+def _sharded_tree(mesh):
+    host = _host_tree()
+    return {
+        # fully sharded over both axes: 8 shards of (4, 4)
+        "w": jax.device_put(host["w"], NS(mesh, P("data", "model"))),
+        # sharded over model, replicated over data: 4 distinct shards
+        "nested": {"b": jax.device_put(host["nested"]["b"], NS(mesh, P("model")))},
+    }
+
+
+def _manifest(root, step):
+    with open(os.path.join(root, f"step_{step:08d}", "manifest.json")) as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# save on a mesh: per-shard files, no global gather
+# ---------------------------------------------------------------------------
+
+
+@multidevice8
+def test_mesh_save_writes_local_shards_only(tmp_path, monkeypatch):
+    mesh = _mesh24()
+    tree = _sharded_tree(mesh)
+
+    def no_gather(*a, **k):  # the save path must never gather to host
+        raise AssertionError("save() called jax.device_get on a global array")
+
+    monkeypatch.setattr(jax, "device_get", no_gather)
+    store = CheckpointStore(str(tmp_path))
+    store.save(1, tree, meta={"step": 1})
+
+    man = _manifest(str(tmp_path), 1)
+    by_key = {l["key"]: l for l in man["leaves"]}
+    w = by_key["w"]
+    assert w["shape"] == [8, 16]
+    assert len(w["shards"]) == 8  # one file per device shard
+    step_dir = os.path.join(str(tmp_path), "step_00000001")
+    covered = np.zeros((8, 16), dtype=bool)
+    for sh in w["shards"]:
+        arr = np.load(os.path.join(step_dir, sh["file"]))
+        (r0, r1), (c0, c1) = sh["index"]
+        assert arr.shape == (r1 - r0, c1 - c0) == (4, 4)  # LOCAL shape
+        covered[r0:r1, c0:c1] = True
+    assert covered.all()  # shards tile the logical array exactly
+    # replicated-over-data leaf: replica_id dedupe keeps 4 of 8 copies
+    b = by_key["nested/b"]
+    assert len(b["shards"]) == 4
+    assert sorted(sh["index"] for sh in b["shards"]) == [
+        [[0, 4]], [[4, 8]], [[8, 12]], [[12, 16]]
+    ]
+
+
+# ---------------------------------------------------------------------------
+# elastic restore: (2,4) -> (1,4), (2,4) -> single device, same mesh
+# ---------------------------------------------------------------------------
+
+
+def _restore_onto(store, sharding_for):
+    host = _host_tree()
+    template = jax.tree.map(lambda x: jnp.zeros_like(x), host)
+    restored, meta = store.restore(
+        template, sharding_fn=lambda key, spec: sharding_for(key, spec)
+    )
+    assert meta["step"] == 1
+    for want, got in zip(jax.tree.leaves(host), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(want, np.asarray(got))  # bitwise
+    return restored
+
+
+@multidevice8
+def test_elastic_restore_smaller_mesh(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    store.save(1, _sharded_tree(_mesh24()), meta={"step": 1})
+    sub = jax.sharding.Mesh(
+        np.array(jax.devices()[:4]).reshape(1, 4), ("data", "model")
+    )
+    restored = _restore_onto(
+        store,
+        lambda key, spec: NS(sub, P("data", "model") if len(spec.shape) == 2
+                             else P("model")),
+    )
+    assert restored["w"].sharding.mesh.shape == {"data": 1, "model": 4}
+    # each (1,4)-mesh shard is (8, 4): reassembled from two saved (4, 4)s
+    assert {s.data.shape for s in restored["w"].addressable_shards} == {(8, 4)}
+
+
+@multidevice8
+def test_elastic_restore_single_device(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    store.save(1, _sharded_tree(_mesh24()), meta={"step": 1})
+    one = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    restored = _restore_onto(store, lambda key, spec: one)
+    assert all(x.sharding == one for x in jax.tree.leaves(restored))
+
+
+@multidevice8
+def test_elastic_restore_same_mesh_stays_sharded(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    mesh = _mesh24()
+    store.save(1, _sharded_tree(mesh), meta={"step": 1})
+    target = NS(mesh, P("data", "model"))
+    restored = _restore_onto(
+        store,
+        lambda key, spec: target if len(spec.shape) == 2 else NS(mesh, P("model")),
+    )
+    assert restored["w"].sharding == target
+    assert {s.data.shape for s in restored["w"].addressable_shards} == {(4, 4)}
+
+
+@multidevice8
+def test_elastic_restore_params_and_opt_state(tmp_path):
+    """The satellite case verbatim: params + a resumable AdamW state saved
+    on the (2,4) mesh come back bitwise on a (1,4) submesh."""
+    from repro.training.optimizer import init_opt_state
+
+    mesh = _mesh24()
+    params = {
+        "wq": jax.device_put(
+            np.arange(8 * 16, dtype=np.float32).reshape(8, 16),
+            NS(mesh, P("data", "model"))),
+        "bias": jax.device_put(np.arange(16, dtype=np.float32),
+                               NS(mesh, P("model"))),
+    }
+    opt = init_opt_state(params)
+    store = CheckpointStore(str(tmp_path))
+    store.save(7, {"params": params, "opt": opt}, meta={"step": 7})
+
+    sub = jax.sharding.Mesh(
+        np.array(jax.devices()[:4]).reshape(1, 4), ("data", "model")
+    )
+
+    def fn(key, spec):
+        if len(spec.shape) == 2:
+            return NS(sub, P("data", "model"))
+        if len(spec.shape) == 1:
+            return NS(sub, P("model"))
+        return NS(sub, P())  # opt step counter and other scalars
+
+    template = jax.tree.map(
+        lambda x: jnp.zeros(x.shape, x.dtype), {"params": params, "opt": opt}
+    )
+    restored, meta = store.restore(template, sharding_fn=fn)
+    assert meta["step"] == 7
+    want = jax.tree.leaves({"params": params, "opt": opt})
+    got = jax.tree.leaves(restored)
+    assert len(want) == len(got)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(restored["opt"].step) == int(opt.step)  # resumable counter
+
+
+# ---------------------------------------------------------------------------
+# subprocess kill-and-resume: bitwise loss-curve continuation
+# ---------------------------------------------------------------------------
+
+_TRAIN = [sys.executable, "-m", "repro.launch.train", "--preset", "gpt-20m",
+          "--steps", "8", "--seq", "64", "--batch", "2",
+          "--ckpt-every", "2", "--mtbf", "0.01"]
+
+
+def _run(tmp_path, name, ckpt, extra, devices=None, expect_kill=False):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    if devices:
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    hist = str(tmp_path / f"{name}.json")
+    cmd = _TRAIN + ["--ckpt-dir", str(tmp_path / ckpt),
+                    "--history-out", hist] + extra
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=600)
+    if expect_kill:
+        assert proc.returncode == -signal.SIGKILL, proc.stderr[-2000:]
+        return None
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    with open(hist) as f:
+        return json.load(f)
+
+
+def _kill_and_resume(tmp_path, devices, mesh_extra):
+    full = _run(tmp_path, "full", "ck_a", mesh_extra, devices)
+    _run(tmp_path, "killed", "ck_b",
+         mesh_extra + ["--fault-plan", "sigkill@4"], devices, expect_kill=True)
+    resumed = _run(tmp_path, "resumed", "ck_b", mesh_extra, devices)
+    assert resumed["restored_at"] > 0
+    assert resumed["preempted"] is False
+    # bitwise continuation: the resumed run's losses equal the
+    # uninterrupted run's suffix from the restored step
+    assert resumed["loss"] == full["loss"][resumed["restored_at"]:]
+
+
+@pytest.mark.slow
+def test_kill_and_resume_single_device(tmp_path):
+    _kill_and_resume(tmp_path, devices=None, mesh_extra=[])
+
+
+@pytest.mark.slow
+def test_kill_and_resume_2d_mesh(tmp_path):
+    _kill_and_resume(
+        tmp_path, devices=8,
+        mesh_extra=["--data-axis", "2", "--model-axis", "4",
+                    "--attn-sharding", "ring"],
+    )
